@@ -1,0 +1,191 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing on the three selected cells (EXPERIMENTS.md SS-Perf).
+
+Each iteration: hypothesis (napkin math from the analytic cost model) ->
+change -> re-lower/re-compile (memory + compile validity) -> re-analyze ->
+confirm/refute.  Artifacts land in benchmarks/results/dryrun/*__optN.json;
+the before/after table prints here and is transcribed into EXPERIMENTS.md.
+
+Cells (chosen per the assignment brief):
+  A. yi-34b / train_4k / pod1        -- worst roofline fraction among the
+     large dense models (unsharded 56-head attention; 28 GB/dev peak)
+  B. deepseek-v3-671b / train_4k / pod2 -- most collective-bound cell
+  C. olmoe-1b-7b / train_4k / pod1   -- the paper's own technique:
+     replication-aware expert placement
+"""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from benchmarks import roofline as roof                       # noqa: E402
+from repro.launch.dryrun import RESULTS, run_cell             # noqa: E402
+
+
+def show(tagline, r):
+    print(f"  {tagline:34s} comp={r['compute_s']*1e3:9.1f}ms "
+          f"mem={r['memory_s']*1e3:8.1f}ms coll={r['collective_s']*1e3:8.1f}ms "
+          f"bound={r['bottleneck']:10s} roof={r['roofline_fraction']*100:5.1f}% "
+          f"peak={r['peak_gb']:.1f}GB", flush=True)
+
+
+def run_variant(arch, shape, multi_pod, tag, overrides=None, plan=None):
+    cell = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}{tag}"
+    path = RESULTS / f"{cell}.json"
+    if path.exists():
+        out = json.loads(path.read_text())
+    else:
+        out = run_cell(arch, shape, multi_pod, tag=tag, overrides=overrides,
+                       plan=plan)
+        path.write_text(json.dumps(out, indent=1))
+    if out["status"] != "ok":
+        print(f"  !! {cell}: {out['status']} {out.get('error','')[:300]}")
+        return None
+    return roof.analyze(out, overrides)
+
+
+def cell_a():
+    print("\n=== Cell A: yi-34b train_4k pod1 (worst-fraction dense) ===")
+    base = run_variant("yi-34b", "train_4k", False, "")
+    show("baseline", base)
+    # Iter 1 -- hypothesis: 56 q-heads % 16 != 0 leaves every attention
+    # projection replicated over the model axis (16x compute);
+    # per-kv-group padding to 64 heads shards them at 14% pad waste.
+    ov1 = {"n_heads_padded": 64}
+    r1 = run_variant("yi-34b", "train_4k", False, "__opt1", overrides=ov1)
+    if r1:
+        show("opt1: pad heads 56->64", r1)
+    # Iter 2 -- hypothesis: saved residuals (60 layers x B/dp x 4k x 7168)
+    # dominate the 28 GB peak; sequence-parallel sharding divides them by
+    # the model-axis extent.
+    ov2 = {"n_heads_padded": 64, "seq_shard_activations": True}
+    r2 = run_variant("yi-34b", "train_4k", False, "__opt2", overrides=ov2)
+    if r2:
+        show("opt2: + sequence-parallel acts", r2)
+    # Iter 3 -- hypothesis: with compute fixed, the grad all-reduce and
+    # optimizer traffic remain; ZeRO moments sharding cuts the optimizer
+    # read/write bytes by dp.
+    ov3 = dict(ov2, zero_opt_state=True)
+    r3 = run_variant("yi-34b", "train_4k", False, "__opt3", overrides=ov3)
+    if r3:
+        show("opt3: + ZeRO optimizer state", r3)
+    return [("baseline", base), ("opt1", r1), ("opt2", r2), ("opt3", r3)]
+
+
+def cell_b():
+    print("\n=== Cell B: deepseek-v3-671b train_4k pod2 (most collective-bound) ===")
+    base = run_variant("deepseek-v3-671b", "train_4k", True, "")
+    show("baseline", base)
+    # Iter 1 -- hypothesis: the 313 GB/step f32-equivalent gradient ring
+    # all-reduce dominates; ZeRO turns it into a bf16 reduce-scatter
+    # (4x fewer bytes) and divides optimizer traffic by dp.
+    ov1 = {"zero_opt_state": True}
+    r1 = run_variant("deepseek-v3-671b", "train_4k", True, "__opt1",
+                     overrides=ov1)
+    if r1:
+        show("opt1: ZeRO bf16 reduce-scatter", r1)
+    # Iter 2 -- hypothesis: expert weights (656B of 671B params) replicated
+    # over the data axis are the remaining memory+collective driver;
+    # 'tp+ep_data' shards their d_model dim over data (persistent storage
+    # /32, per-layer streamed gather).
+    ov2 = {"zero_opt_state": True, "strategy": "tp+ep_data"}
+    r2 = run_variant("deepseek-v3-671b", "train_4k", True, "__opt2",
+                     overrides=ov2)
+    if r2:
+        show("opt2: + expert ep_data sharding", r2)
+    return [("baseline", base), ("opt1", r1), ("opt2", r2)]
+
+
+def cell_c():
+    print("\n=== Cell C: olmoe-1b-7b train_4k pod1 (paper technique) ===")
+    from repro.core.placement.expert_placement import plan_expert_placement
+    from repro.datagen import synthetic_trace
+
+    base = run_variant("olmoe-1b-7b", "train_4k", False, "")
+    show("baseline (round-robin placement)", base)
+    # Paper-faithful step: profile co-activation, partition WITH replication
+    # (eps = spare expert-slot memory), route local-first.  The plan's
+    # local fraction statically shrinks the MoE all_to_all buffers.
+    trace = synthetic_trace(n_experts=64, n_tokens=50_000, top_k=8, seed=7)
+    res = plan_expert_placement(trace, 64, 16, eps=1.0, kappa0=1000)
+    print(f"  placement: lambda-cost {res.lambda_cost_no_repl:.0f} -> "
+          f"{res.lambda_cost_repl:.0f} "
+          f"(-{(1 - res.lambda_cost_repl / max(res.lambda_cost_no_repl, 1e-9)) * 100:.1f}%), "
+          f"local fraction {res.local_fraction_no_repl:.3f} -> "
+          f"{res.local_fraction_repl:.3f}")
+    r1 = run_variant("olmoe-1b-7b", "train_4k", False, "__opt1",
+                     overrides={"expert_placement":
+                                (res.plan.local_fraction, 1.25)},
+                     plan=res.plan)
+    if r1:
+        show("opt1: replicated placement", r1)
+    # Beyond-paper: the calibration showed capacity padding costs ~2x the
+    # useful expert FLOPs; the replicated plan's locality allows a tighter
+    # capacity factor at equal drop rate.
+    import dataclasses
+    tight = dataclasses.replace(res.plan, capacity_factor=1.0)
+    r2 = run_variant("olmoe-1b-7b", "train_4k", False, "__opt2",
+                     overrides={"expert_placement":
+                                (tight.local_fraction, 1.0)},
+                     plan=tight)
+    if r2:
+        show("opt2: + capacity factor 1.25->1.0", r2)
+    return [("baseline", base), ("opt1", r1), ("opt2", r2)]
+
+
+def cell_d():
+    """Extra (beyond the required three): hymba-1.5b train_4k."""
+    print("\n=== Cell D: hymba-1.5b train_4k pod1 (hybrid, compute-bound) ===")
+    base = run_variant("hymba-1.5b", "train_4k", False, "")
+    show("baseline", base)
+    # Hypothesis: 25 heads % 16 != 0 leaves the attention half of every
+    # hybrid mixer replicated 16x; per-kv-group padding needs G_pad s.t.
+    # 5*G_pad % 16 == 0 -> 80 physical heads (3.2x pad waste but /16
+    # sharding; cost model predicts 2.26x total FLOP reduction).
+    r1 = run_variant("hymba-1.5b", "train_4k", False, "__opt1",
+                     overrides={"n_heads_padded": 80})
+    if r1:
+        show("opt1: pad heads 25->80", r1)
+    return [("baseline", base), ("opt1", r1)]
+
+
+def cell_e():
+    """Extra: deepseek-v3-671b decode_32k (memory-bound class).
+
+    Hypothesis: naive MLA decode re-expands every cached latent to full
+    K/V each step (34 TFLOP + 250 GB/step/dev); absorbing W_UK/W_UV into
+    the query/output keeps attention in the 576-dim latent space --
+    cost model predicts 47x flops, 2.4x HBM reduction."""
+    print("\n=== Cell E: deepseek-v3-671b decode_32k pod1 (memory-bound) ===")
+    naive = run_variant("deepseek-v3-671b", "decode_32k", False, "__naive",
+                        overrides={"mla_absorb": False,
+                                   "strategy": "tp+ep_data"})
+    if naive:
+        show("naive latent re-expansion", naive)
+    absorbed = run_variant("deepseek-v3-671b", "decode_32k", False, "__opt1",
+                           overrides={"mla_absorb": True,
+                                      "strategy": "tp+ep_data"})
+    if absorbed:
+        show("opt1: absorbed-weight MLA", absorbed)
+    return [("naive", naive), ("opt1", absorbed)]
+
+
+def main():
+    out = {"A_yi34b": cell_a(), "B_dsv3": cell_b(), "C_olmoe": cell_c(),
+           "D_hymba": cell_d(), "E_v3_decode": cell_e()}
+    serializable = {
+        k: [(tag, r) for tag, r in v if r is not None]
+        for k, v in out.items()
+    }
+    (pathlib.Path(__file__).parent / "results" / "hillclimb.json").write_text(
+        json.dumps(serializable, indent=1, default=float))
+    print("\n[hillclimb] results saved")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Roofline assembly (deliverable g).
+
+Terms per (arch x shape x mesh) cell:
+    compute    = FLOPs_per_chip / 197e12        (bf16 peak, TPU v5e)
+    memory     = HBM_bytes_per_chip / 819e9
+    collective = collective_bytes_per_chip / 50e9 (ICI link)
+
+FLOPs / HBM bytes / collective bytes come from the analytic per-layer cost
+model (src/repro/roofline/model.py) -- XLA's HloCostAnalysis does not scale
+while-loop (scan) bodies by trip count, so the compiled numbers undercount
+by ~n_layers; the analytic model is validated against unrolled calibration
+compiles (benchmarks/calibration.py, <=9% err).  Peak HBM per device comes
+from the real 512-device compile (buffer assignment is loop-aware).
+
+MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (serve); useful-compute ratio =
+MODEL_FLOPS / (analytic FLOPs x chips); roofline fraction = useful model
+FLOP rate at the bottleneck-implied step time vs chip peak.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import SHAPES, get_config          # noqa: E402
+from repro.roofline.model import step_cost            # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        name = d.get("cell", f.stem)
+        if tag and not name.endswith(tag):
+            continue
+        if not tag and not name.endswith(("__pod1", "__pod2")):
+            continue  # tagged variants (__optN/__naive) are SS-Perf artifacts
+        cells.append(d)
+    return cells
+
+
+def analyze(cell: dict, overrides: dict | None = None) -> dict | None:
+    if cell.get("status") != "ok":
+        return None
+    cfg = get_config(cell["arch"])
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[cell["shape"]]
+    mesh = cell["mesh"]
+    dp = mesh.get("data", 1) * mesh.get("pod", 1)
+    tp = mesh.get("model", 1)
+    if shape.kind == "decode":
+        B, S, K = shape.global_batch, 1, shape.seq_len
+    else:
+        B, S, K = shape.global_batch, shape.seq_len, shape.seq_len
+    c = step_cost(cfg, B, S, K, dp, tp, shape.kind)
+    terms = {"compute": c["flops"] / PEAK_FLOPS,
+             "memory": c["hbm_bytes"] / HBM_BW,
+             "collective": c["coll_bytes"] / LINK_BW}
+    bottleneck = max(terms, key=terms.get)
+    tokens = B * S
+    n_act = cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_act * tokens
+    chips = cell["chips"]
+    useful = model_flops / (c["flops"] * chips) if c["flops"] else 0.0
+    t_step = max(terms.values())
+    frac = (model_flops / chips / PEAK_FLOPS) / t_step if t_step else 0.0
+    return {
+        "cell": cell["cell"],
+        "arch": cell["arch"],
+        "shape": cell["shape"],
+        "mesh": "x".join(str(v) for v in mesh.values()),
+        "chips": chips,
+        "compute_s": terms["compute"],
+        "memory_s": terms["memory"],
+        "collective_s": terms["collective"],
+        "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gb": (cell["memory"]["peak_bytes"] or 0) / 2**30,
+    }
+
+
+def improvement_hint(r: dict) -> str:
+    if r["bottleneck"] == "memory":
+        if r["shape"] in ("decode_32k", "long_500k"):
+            return ("decode is weight/KV-bandwidth bound: quantize weights/"
+                    "KV or raise batch to amortize weight reads")
+        return ("shard saved activations over the model axis (sequence "
+                "parallelism) / cut optimizer-state traffic")
+    if r["bottleneck"] == "collective":
+        return ("reduce TP all-reduce volume: sequence-parallel boundaries, "
+                "bf16 grad reduce, or (MoE) replication-aware placement to "
+                "shrink all_to_all buffers")
+    return "compute-bound: close to the right regime; tune tiling/fusion"
+
+
+def table(tag: str = "", overrides: dict | None = None) -> list[dict]:
+    out = []
+    for c in load_cells(tag):
+        a = analyze(c, overrides)
+        if a:
+            out.append(a)
+    return out
+
+
+def main() -> None:
+    rows = table()
+    hdr = (f"{'cell':52s} {'comp(ms)':>9s} {'mem(ms)':>9s} {'coll(ms)':>9s} "
+           f"{'bound':>6s} {'useful':>7s} {'roof%':>6s} {'peakGB':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"{r['cell']:52s} {r['compute_s']*1e3:9.2f} "
+              f"{r['memory_s']*1e3:9.2f} {r['collective_s']*1e3:9.2f} "
+              f"{r['bottleneck'][:6]:>6s} {r['useful_ratio']:7.2f} "
+              f"{r['roofline_fraction']*100:6.1f} {r['peak_gb']:7.2f}")
+    over = [r for r in rows if r["peak_gb"] > 16]
+    if over:
+        print(f"\n{len(over)} cells exceed 16 GB v5e HBM "
+              f"(see EXPERIMENTS.md SS-Dry-run for the mitigation notes):")
+        for r in over:
+            print(f"  {r['cell']}: {r['peak_gb']:.1f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Benchmark harness: one function per paper table (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV -- `derived` is the table's key
+quantity (mean cost-reduction %, exact-gap %, roofline fraction ...).
+Full-size runs: REPRO_BENCH_FULL=1.  JSON details land in
+benchmarks/results/.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def _emit(name: str, seconds: float, derived) -> None:
+    print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)
+
+
+def main() -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    from benchmarks import ilp_vs_heuristic, partitioning, scheduling
+    from benchmarks import roofline as roof
+
+    print("name,us_per_call,derived", flush=True)
+
+    # ---- partitioning (paper Fig. 4 / Tables 1, 10-12) -------------------
+    t0 = time.time()
+    part = partitioning.run_all()
+    (RESULTS / "partitioning.json").write_text(json.dumps(part, indent=1))
+    for key in ("fig4_P2", "fig4_P4"):
+        for ds, row in part[key].items():
+            _emit(f"partition_{key}_{ds}", part["seconds"],
+                  f"reduction={row['reduction_pct']:.1f}%;zeros={row['zeros']}")
+    for eps, row in part["table1"].items():
+        mean = sum(r["reduction_pct"] for r in row.values()) / len(row)
+        _emit(f"partition_table1_{eps}", part["seconds"],
+              f"mean_reduction={mean:.1f}%")
+    _emit("partition_forms_DvsR", part["seconds"],
+          f"wins={part['forms']['wins']}")
+
+    # ---- scheduling (paper Tables 2, 3, 4) -------------------------------
+    sched = scheduling.run_all()
+    (RESULTS / "scheduling.json").write_text(json.dumps(sched, indent=1))
+    for ds, row in sched["table2"].items():
+        for p, v in row.items():
+            _emit(f"schedule_table2_{ds}_{p}", sched["seconds"],
+                  f"basic={v['basic_pct']:.2f}%;advanced={v['advanced_pct']:.2f}%")
+    for ds, row in sched["table3"].items():
+        for gl, v in row.items():
+            _emit(f"schedule_table3_{ds}_{gl}", sched["seconds"],
+                  f"advanced={v['advanced_pct']:.2f}%")
+    for ds, row in sched["table4"].items():
+        _emit(f"schedule_table4_{ds}", sched["seconds"],
+              ";".join(f"{k}={v:.2f}%" for k, v in row.items()))
+    for sc, v in sched.get("table13", {}).items():
+        _emit(f"schedule_table13_{sc}", sched["seconds"],
+              f"n={v['n_range']};advanced={v['advanced_pct']:.2f}%")
+
+    # ---- exact vs heuristic (paper §C.2.2) -------------------------------
+    ex = ilp_vs_heuristic.run_all()
+    (RESULTS / "ilp_vs_heuristic.json").write_text(json.dumps(ex, indent=1))
+    for p in ("P=2", "P=4"):
+        _emit(f"schedule_exact_{p}", ex["seconds"],
+              f"reduction={ex[p]['mean_reduction_pct']:.2f}%;"
+              f"heuristic_gap={ex[p]['heuristic_gap_pct']:.2f}%")
+
+    # ---- roofline table (from dry-run artifacts) -------------------------
+    t0 = time.time()
+    rows = roof.table()
+    (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=1))
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        best = max(rows, key=lambda r: r["roofline_fraction"])
+        _emit("roofline_cells", time.time() - t0,
+              f"n={len(rows)};best={best['cell']}:"
+              f"{best['roofline_fraction']*100:.1f}%;"
+              f"worst={worst['cell']}:{worst['roofline_fraction']*100:.1f}%")
+    else:
+        _emit("roofline_cells", time.time() - t0,
+              "no dry-run artifacts (run repro.launch.dryrun --all)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""BSP scheduling with replication on an SpTRSV dependency DAG (paper §6).
+
+    PYTHONPATH=src python examples/bsp_schedule.py [--n 800] [--P 8]
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.schedule import (BspInstance, advanced_heuristic,
+                                 baseline_schedule, basic_heuristic)
+from repro.datagen import sptrsv_dag
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=800)
+    ap.add_argument("--P", type=int, default=8)
+    ap.add_argument("--g", type=float, default=4.0)
+    ap.add_argument("--L", type=float, default=20.0)
+    args = ap.parse_args()
+
+    dag = sptrsv_dag(n=args.n, seed=1)
+    print(f"SpTRSV DAG: {dag.n} rows, {dag.num_edges} dependencies")
+    inst = BspInstance(dag, P=args.P, g=args.g, L=args.L)
+
+    base = baseline_schedule(inst)
+    print(f"baseline (BSPg + hill climbing): cost {base.current_cost():.0f} "
+          f"({base.S} supersteps, {len(base.comms)} comms)")
+    b = basic_heuristic(base.copy())
+    print(f"basic replication heuristic:     cost {b.current_cost():.0f} "
+          f"({b.stats()['replicas']} replicas)"
+          f"  [-{(1 - b.current_cost() / base.current_cost()) * 100:.2f}%]")
+    a = advanced_heuristic(base.copy())
+    print(f"advanced (BR+SM+SR):             cost {a.current_cost():.0f} "
+          f"({a.S} supersteps, {a.stats()['replicas']} replicas)"
+          f"  [-{(1 - a.current_cost() / base.current_cost()) * 100:.2f}%]")
+    assert not a.validate(), "schedule invalid!"
+    print("validity: OK (precedence + data availability checked)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""The paper's technique end-to-end: replication-aware MoE expert placement.
+
+    PYTHONPATH=src python examples/moe_placement.py
+
+1. Run a (reduced) OLMoE model and profile its router -> expert
+   co-activation trace (`Model.route_trace`).
+2. Build the moe-8 co-activation hypergraph (paper §B.1).
+3. Partition experts over EP shards WITHOUT replication (baseline) and
+   WITH replication (the paper's contribution) under the same memory
+   budget eps.
+4. Report the paper's (lambda_e - 1) communication metric and the
+   resulting all_to_all buffer shrinkage the runtime realizes.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core.placement.expert_placement import plan_expert_placement
+from repro.models.model import Model
+from repro.models.moe import a2a_capacities
+
+
+def main() -> None:
+    cfg = reduce_config(get_config("olmoe-1b-7b"), layers_per_segment=2)
+    cfg = cfg.with_(n_experts=32, top_k=4)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab, (8, 128)).astype(np.int32)}
+    print("profiling router co-activation on warmup traffic ...")
+    traces = model.route_trace(params, batch)
+    trace = np.sort(np.asarray(traces[0]).reshape(-1, cfg.top_k), axis=1)
+    print(f"  trace: {trace.shape[0]} token-routings, top-{cfg.top_k} "
+          f"of {cfg.n_experts} experts")
+
+    n_shards = 8
+    res = plan_expert_placement(trace, cfg.n_experts, n_shards, eps=0.5,
+                                kappa0=min(1000, 4 * len(trace)))
+    print(f"\npartitioning experts over {n_shards} EP shards (eps=0.5):")
+    print(f"  (lambda-1) cost  no-replication: {res.lambda_cost_no_repl:.1f}")
+    print(f"  (lambda-1) cost  with replication: {res.lambda_cost_repl:.1f}"
+          f"  (-{(1 - res.lambda_cost_repl / max(res.lambda_cost_no_repl, 1e-9)) * 100:.1f}%)")
+    print(f"  local token-choice fraction: {res.local_fraction_no_repl:.3f}"
+          f" -> {res.local_fraction_repl:.3f}")
+    reps = [res.plan.replicas(e) for e in range(cfg.n_experts)]
+    print(f"  replicated experts: {sum(1 for r in reps if r > 1)} "
+          f"(max replicas {max(reps)})")
+
+    T_loc = 512
+    for name, plan in (("round-robin", res.baseline_plan),
+                       ("replicated", res.plan)):
+        cl, cs, ci = a2a_capacities(plan, T_loc, cfg.top_k)
+        a2a_bytes = 2 * plan.n_shards * cs * cfg.d_model * 2
+        print(f"  {name:12s}: all_to_all buffer {a2a_bytes/1e3:.1f} kB/step"
+              f" (cap_send={cs})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Hypergraph and DAG data structures for partitioning / scheduling.
+
+These mirror the paper's Section 3 definitions:
+  * a hypergraph is (V, E) with each e in E a subset of V; a (v, e) pair with
+    v in e is a *pin*;
+  * node weights ``omega`` express compute cost, hyperedge weights ``mu``
+    express communicated data size (both default to 1);
+  * a DAG is a directed acyclic graph with node compute weights ``omega``
+    and node communication weights ``mu`` (size of a node's output value).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Hypergraph:
+    n: int
+    edges: list[tuple[int, ...]]
+    omega: np.ndarray | None = None  # node weights, shape (n,)
+    mu: np.ndarray | None = None     # hyperedge weights, shape (len(edges),)
+    name: str = "hypergraph"
+
+    def __post_init__(self) -> None:
+        if self.omega is None:
+            self.omega = np.ones(self.n, dtype=np.float64)
+        else:
+            self.omega = np.asarray(self.omega, dtype=np.float64)
+        if self.mu is None:
+            self.mu = np.ones(len(self.edges), dtype=np.float64)
+        else:
+            self.mu = np.asarray(self.mu, dtype=np.float64)
+        self.edges = [tuple(sorted(set(e))) for e in self.edges]
+        for e in self.edges:
+            if any(v < 0 or v >= self.n for v in e):
+                raise ValueError(f"edge {e} out of range for n={self.n}")
+
+    @property
+    def num_pins(self) -> int:
+        return sum(len(e) for e in self.edges)
+
+    def incident_edges(self) -> list[list[int]]:
+        """For each node, the list of edge indices containing it."""
+        inc: list[list[int]] = [[] for _ in range(self.n)]
+        for ei, e in enumerate(self.edges):
+            for v in e:
+                inc[v].append(ei)
+        return inc
+
+    def remove_isolated(self) -> "Hypergraph":
+        """Drop nodes appearing in no hyperedge (paper §B.1 does the same)."""
+        used = sorted({v for e in self.edges for v in e})
+        remap = {v: i for i, v in enumerate(used)}
+        edges = [tuple(remap[v] for v in e) for e in self.edges]
+        return Hypergraph(
+            n=len(used),
+            edges=edges,
+            omega=self.omega[used],
+            mu=self.mu.copy(),
+            name=self.name,
+        )
+
+    @staticmethod
+    def from_graph(n: int, pairs: Iterable[tuple[int, int]], **kw) -> "Hypergraph":
+        return Hypergraph(n=n, edges=[tuple(p) for p in pairs], **kw)
+
+
+@dataclasses.dataclass
+class Dag:
+    """Computational DAG.  ``parents[v]`` / ``children[v]`` are index lists."""
+
+    n: int
+    edge_list: list[tuple[int, int]]
+    omega: np.ndarray | None = None  # compute weight per node
+    mu: np.ndarray | None = None     # communication weight (output size) per node
+    name: str = "dag"
+
+    def __post_init__(self) -> None:
+        if self.omega is None:
+            self.omega = np.ones(self.n, dtype=np.float64)
+        else:
+            self.omega = np.asarray(self.omega, dtype=np.float64)
+        if self.mu is None:
+            self.mu = np.ones(self.n, dtype=np.float64)
+        else:
+            self.mu = np.asarray(self.mu, dtype=np.float64)
+        self.parents: list[list[int]] = [[] for _ in range(self.n)]
+        self.children: list[list[int]] = [[] for _ in range(self.n)]
+        seen = set()
+        for (u, v) in self.edge_list:
+            if (u, v) in seen:
+                continue
+            seen.add((u, v))
+            if not (0 <= u < self.n and 0 <= v < self.n):
+                raise ValueError(f"edge ({u},{v}) out of range")
+            self.parents[v].append(u)
+            self.children[u].append(v)
+        self._topo: list[int] | None = None
+
+    @property
+    def num_edges(self) -> int:
+        return sum(len(c) for c in self.children)
+
+    def topo_order(self) -> list[int]:
+        if self._topo is not None:
+            return self._topo
+        indeg = [len(p) for p in self.parents]
+        stack = [v for v in range(self.n) if indeg[v] == 0]
+        order: list[int] = []
+        while stack:
+            v = stack.pop()
+            order.append(v)
+            for c in self.children[v]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    stack.append(c)
+        if len(order) != self.n:
+            raise ValueError("graph has a directed cycle")
+        self._topo = order
+        return order
+
+    def sources(self) -> list[int]:
+        return [v for v in range(self.n) if not self.parents[v]]
+
+    def sinks(self) -> list[int]:
+        return [v for v in range(self.n) if not self.children[v]]
+
+
+def connected_components(hg: Hypergraph) -> list[list[int]]:
+    parent = list(range(hg.n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for e in hg.edges:
+        for v in e[1:]:
+            ra, rb = find(e[0]), find(v)
+            if ra != rb:
+                parent[ra] = rb
+    comps: dict[int, list[int]] = {}
+    for v in range(hg.n):
+        comps.setdefault(find(v), []).append(v)
+    return list(comps.values())

@@ -1,0 +1,174 @@
+"""Exact branch-and-bound solver for (hyper)graph partitioning.
+
+This plays the role of the paper's ILP formulations (§5).  The container has
+no commercial ILP solver (the paper uses COPT), so we solve the same 0/1
+programs exactly with a branch-and-bound search that certifies optimality on
+small instances:
+
+  * mode='none'  -- classical partitioning, each node on exactly 1 processor
+                    (the base ILP of §5.1);
+  * mode='dup'   -- ILP/D semantics (§5.2.1): at most 2 replicas per node;
+  * mode='rep'   -- ILP/R semantics (§5.2.2): unlimited replication.
+
+Branching assigns each node a processor *bitmask*; the lower bound is the
+connectivity cost of partially-assigned hyperedges, which is monotone:
+adding pins to an edge can only raise its minimum cover.  Processor-
+permutation symmetry is broken by only allowing a new processor index once
+all smaller indices are in use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..hypergraph import Hypergraph
+from .cost import capacity, min_cover, partition_cost
+
+
+@dataclasses.dataclass
+class ExactResult:
+    masks: np.ndarray
+    cost: float
+    optimal: bool
+    nodes_explored: int
+    seconds: float
+
+
+def _candidate_masks(P: int, mode: str) -> list[int]:
+    out = []
+    for m in range(1, 1 << P):
+        k = bin(m).count("1")
+        if mode == "none" and k != 1:
+            continue
+        if mode == "dup" and k > 2:
+            continue
+        out.append(m)
+    # prefer fewer replicas first: cheaper loads, finds good UBs earlier
+    out.sort(key=lambda m: (bin(m).count("1"), m))
+    return out
+
+
+def exact_partition(
+    hg: Hypergraph,
+    P: int,
+    eps: float,
+    mode: str = "none",
+    time_limit: float | None = None,
+    ub_masks: np.ndarray | None = None,
+) -> ExactResult:
+    assert mode in ("none", "dup", "rep")
+    n = len(hg.edges)
+    cap = capacity(hg, P, eps) + 1e-9
+    t0 = time.monotonic()
+
+    inc = hg.incident_edges()
+    # order nodes by decreasing total incident edge weight (tight LBs early)
+    score = [sum(hg.mu[ei] for ei in inc[v]) for v in range(hg.n)]
+    order = sorted(range(hg.n), key=lambda v: -score[v])
+    pos_in_order = {v: i for i, v in enumerate(order)}
+
+    cands = _candidate_masks(P, mode)
+
+    best_cost = np.inf
+    best_masks: np.ndarray | None = None
+    if ub_masks is not None:
+        best_masks = np.asarray(ub_masks).copy()
+        best_cost = partition_cost(hg, best_masks, P)
+
+    masks = np.zeros(hg.n, dtype=np.int64)
+    load = np.zeros(P, dtype=np.float64)
+    # per-edge partial pin masks (list of masks of already-assigned pins)
+    edge_pins: list[list[int]] = [[] for _ in range(n)]
+    edge_lb = np.zeros(n, dtype=np.float64)  # current mu*(cover-1) of partial edge
+    remaining_w = [0.0] * (hg.n + 1)
+    for i in range(hg.n - 1, -1, -1):
+        remaining_w[i] = remaining_w[i + 1] + hg.omega[order[i]]
+
+    state = {"explored": 0, "timed_out": False, "lb_sum": 0.0,
+             "best_cost": best_cost, "best_masks": best_masks}
+
+    def dfs(idx: int, used_procs: int) -> None:
+        if state["timed_out"]:
+            return
+        state["explored"] += 1
+        if time_limit is not None and state["explored"] % 2048 == 0:
+            if time.monotonic() - t0 > time_limit:
+                state["timed_out"] = True
+                return
+        if idx == hg.n:
+            if state["lb_sum"] < state["best_cost"] - 1e-12:
+                state["best_cost"] = state["lb_sum"]
+                state["best_masks"] = masks.copy()
+            return
+        v = order[idx]
+        # capacity feasibility: every remaining node needs >= its weight somewhere
+        free = float(np.maximum(cap - load, 0.0).sum())
+        if remaining_w[idx] > free + 1e-9:
+            return
+        for m in cands:
+            # Symmetry breaking: used processors always form the prefix
+            # {0..used_procs-1}; a mask may use any of those plus a
+            # *contiguous block* of fresh processors starting at used_procs
+            # (fresh processors are mutually symmetric).
+            high = m >> used_procs
+            if high & (high + 1):
+                continue
+            # balance check
+            ok = True
+            k = 0
+            mm = m
+            while mm:
+                p = (mm & -mm).bit_length() - 1
+                if load[p] + hg.omega[v] > cap:
+                    ok = False
+                    break
+                mm &= mm - 1
+                k += 1
+            if not ok:
+                continue
+            # apply
+            delta_lb = 0.0
+            touched = []
+            mm = m
+            while mm:
+                p = (mm & -mm).bit_length() - 1
+                load[p] += hg.omega[v]
+                mm &= mm - 1
+            for ei in inc[v]:
+                edge_pins[ei].append(m)
+                new_lb = hg.mu[ei] * max(0, min_cover(edge_pins[ei], P) - 1)
+                delta_lb += new_lb - edge_lb[ei]
+                touched.append((ei, edge_lb[ei]))
+                edge_lb[ei] = new_lb
+            state["lb_sum"] += delta_lb
+            masks[v] = m
+            if state["lb_sum"] < state["best_cost"] - 1e-12:
+                new_used = max(used_procs, m.bit_length())
+                dfs(idx + 1, new_used)
+            # undo
+            masks[v] = 0
+            state["lb_sum"] -= delta_lb
+            for ei, old in reversed(touched):
+                edge_pins[ei].pop()
+                edge_lb[ei] = old
+            mm = m
+            while mm:
+                p = (mm & -mm).bit_length() - 1
+                load[p] -= hg.omega[v]
+                mm &= mm - 1
+            if state["timed_out"]:
+                return
+
+    dfs(0, 0)
+    seconds = time.monotonic() - t0
+    if state["best_masks"] is None:
+        raise RuntimeError("no feasible partition found (check eps/P)")
+    return ExactResult(
+        masks=np.asarray(state["best_masks"]),
+        cost=float(state["best_cost"]),
+        optimal=not state["timed_out"],
+        nodes_explored=state["explored"],
+        seconds=seconds,
+    )

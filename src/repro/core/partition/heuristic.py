@@ -1,0 +1,273 @@
+"""Heuristic partitioner + replication local search for paper-scale instances.
+
+The paper solves instances of 80-500 nodes with a commercial ILP solver and a
+5-hour budget; offline, we complement the exact branch-and-bound
+(`exact.py`, viable to n ~ 25-40) with:
+
+  * a multi-restart greedy + FM-style refinement baseline (no replication);
+  * a replication local search that starts from the non-replicating solution
+    and keeps adding (or dropping) replicas while the connectivity cost
+    decreases and the balance constraint allows it.  ``max_replicas=2``
+    gives the ILP/D search space, ``None`` the ILP/R one.
+
+This mirrors the paper's observation (§8) that replication comes "for free":
+the per-partition capacity is unchanged, replicas only consume slack.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..hypergraph import Hypergraph
+from .cost import capacity, edge_cost, min_cover, partition_cost  # noqa: F401
+
+
+@dataclasses.dataclass
+class HeuristicResult:
+    masks: np.ndarray
+    cost: float
+
+
+def _greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator) -> np.ndarray:
+    """BFS-grow partitions over the pin-adjacency, balanced by weight."""
+    cap_target = float(hg.omega.sum()) / P  # aim for perfect balance
+    inc = hg.incident_edges()
+    visited = np.zeros(hg.n, dtype=bool)
+    part = np.zeros(hg.n, dtype=np.int64)
+    order = rng.permutation(hg.n)
+    cur_p, cur_w = 0, 0.0
+    from collections import deque
+
+    queue: deque[int] = deque()
+    qi = 0
+    while True:
+        if not queue:
+            while qi < hg.n and visited[order[qi]]:
+                qi += 1
+            if qi == hg.n:
+                break
+            queue.append(order[qi])
+        v = queue.popleft()
+        if visited[v]:
+            continue
+        visited[v] = True
+        if cur_w + hg.omega[v] > cap_target and cur_p < P - 1:
+            cur_p += 1
+            cur_w = 0.0
+        part[v] = cur_p
+        cur_w += hg.omega[v]
+        for ei in inc[v]:
+            for u in hg.edges[ei]:
+                if not visited[u]:
+                    queue.append(u)
+    return (1 << part).astype(np.int64)
+
+
+def _fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
+               rng: np.random.Generator, passes: int = 6) -> np.ndarray:
+    """Move-based refinement (single-assignment masks)."""
+    cap = capacity(hg, P, eps) + 1e-9
+    inc = hg.incident_edges()
+    load = np.zeros(P)
+    for v in range(hg.n):
+        load[int(masks[v]).bit_length() - 1] += hg.omega[v]
+
+    def incident_cost(v: int) -> float:
+        return sum(edge_cost(hg, masks, ei, P) for ei in inc[v])
+
+    for _ in range(passes):
+        improved = False
+        for v in rng.permutation(hg.n):
+            p = int(masks[v]).bit_length() - 1
+            base = incident_cost(v)
+            best_gain, best_q = 0.0, -1
+            for q in range(P):
+                if q == p or load[q] + hg.omega[v] > cap:
+                    continue
+                masks[v] = 1 << q
+                gain = base - incident_cost(v)
+                masks[v] = 1 << p
+                if gain > best_gain + 1e-12:
+                    best_gain, best_q = gain, q
+            if best_q >= 0:
+                masks[v] = 1 << best_q
+                load[p] -= hg.omega[v]
+                load[best_q] += hg.omega[v]
+                improved = True
+        if not improved:
+            break
+    return masks
+
+
+def partition_heuristic(hg: Hypergraph, P: int, eps: float,
+                        restarts: int = 4, seed: int = 0) -> HeuristicResult:
+    """Non-replicating baseline: greedy initial + FM refinement, best of restarts."""
+    rng = np.random.default_rng(seed)
+    best_masks, best_cost = None, np.inf
+    for _ in range(restarts):
+        masks = _greedy_initial(hg, P, eps, rng)
+        masks = _fm_refine(hg, masks, P, eps, rng)
+        c = partition_cost(hg, masks, P)
+        if c < best_cost:
+            best_cost, best_masks = c, masks.copy()
+    return HeuristicResult(masks=best_masks, cost=float(best_cost))
+
+
+def replicate_local_search(
+    hg: Hypergraph,
+    masks: np.ndarray,
+    P: int,
+    eps: float,
+    max_replicas: int | None = None,
+    max_passes: int = 30,
+    seed: int = 0,
+) -> HeuristicResult:
+    """Add/drop replicas while the (lambda_e - 1) cost decreases.
+
+    Starts from any valid assignment (typically the non-replicating optimum
+    or heuristic solution, as the paper suggests for warm-starting ILPs in
+    §C.1.1).
+    """
+    rng = np.random.default_rng(seed)
+    masks = np.asarray(masks, dtype=np.int64).copy()
+    cap = capacity(hg, P, eps) + 1e-9
+    inc = hg.incident_edges()
+    load = np.zeros(P)
+    for v in range(hg.n):
+        m = int(masks[v])
+        for p in range(P):
+            if (m >> p) & 1:
+                load[p] += hg.omega[v]
+
+    def incident_cost(v: int) -> float:
+        return sum(edge_cost(hg, masks, ei, P) for ei in inc[v])
+
+    def try_edge_move(ei: int) -> bool:
+        """Edge-guided move: a hyperedge with lambda=2 whose minority side
+        has few pins can often be closed by replicating ALL minority pins
+        at once (single-node moves cannot improve an 8-pin hyperedge)."""
+        e = hg.edges[ei]
+        pin_masks = [int(masks[v]) for v in e]
+        lam = min_cover(pin_masks, P)
+        if lam < 2:
+            return False
+        # try to cover the edge with each single processor
+        best = None
+        for p in range(P):
+            movers = [v for v in e if not (int(masks[v]) >> p) & 1]
+            if not movers:
+                continue
+            if max_replicas is not None and any(
+                    bin(int(masks[v])).count("1") >= max_replicas
+                    for v in movers):
+                continue
+            w = sum(hg.omega[v] for v in movers)
+            if load[p] + w > cap:
+                continue
+            if best is None or len(movers) < len(best[1]):
+                best = (p, movers, w)
+        if best is None:
+            return False
+        p, movers, w = best
+        touched = sorted({e2 for v in movers for e2 in inc[v]})
+        before = sum(edge_cost(hg, masks, e2, P) for e2 in touched)
+        old = [int(masks[v]) for v in movers]
+        for v in movers:
+            masks[v] = int(masks[v]) | (1 << p)
+        after = sum(edge_cost(hg, masks, e2, P) for e2 in touched)
+        if after < before - 1e-12:
+            load[p] += w
+            return True
+        for v, m_old in zip(movers, old):
+            masks[v] = m_old
+        return False
+
+    for _ in range(max_passes):
+        improved = False
+        for ei in rng.permutation(len(hg.edges)):
+            if try_edge_move(int(ei)):
+                improved = True
+        for v in rng.permutation(hg.n):
+            m = int(masks[v])
+            k = bin(m).count("1")
+            base = incident_cost(v)
+            # --- try adding a replica ---
+            if max_replicas is None or k < max_replicas:
+                best_gain, best_p = 0.0, -1
+                for p in range(P):
+                    if (m >> p) & 1 or load[p] + hg.omega[v] > cap:
+                        continue
+                    masks[v] = m | (1 << p)
+                    gain = base - incident_cost(v)
+                    masks[v] = m
+                    if gain > best_gain + 1e-12:
+                        best_gain, best_p = gain, p
+                if best_p >= 0:
+                    masks[v] = m | (1 << best_p)
+                    load[best_p] += hg.omega[v]
+                    improved = True
+                    continue
+            # --- try dropping a replica (free the balance slack) ---
+            if k > 1:
+                for p in range(P):
+                    if bin(m).count("1") <= 1:
+                        break
+                    if not (m >> p) & 1:
+                        continue
+                    masks[v] = m & ~(1 << p)
+                    if incident_cost(v) <= base + 1e-12:
+                        load[p] -= hg.omega[v]
+                        improved = True
+                        m = int(masks[v])
+                        base = incident_cost(v)
+                    else:
+                        masks[v] = m
+        if not improved:
+            break
+    return HeuristicResult(masks=masks, cost=partition_cost(hg, masks, P))
+
+
+def partition_with_replication(
+    hg: Hypergraph,
+    P: int,
+    eps: float,
+    mode: str = "rep",
+    exact_node_limit: int = 24,
+    time_limit: float | None = 20.0,
+    seed: int = 0,
+):
+    """End-to-end entry: returns (non_repl_result, repl_result).
+
+    Small instances are solved exactly (both with and without replication,
+    i.e. the paper's base-ILP vs ILP/D or ILP/R comparison); larger ones use
+    the heuristic + replication local search.
+    """
+    from .exact import exact_partition
+
+    if hg.n <= exact_node_limit:
+        base = exact_partition(hg, P, eps, mode="none", time_limit=time_limit)
+        rep = exact_partition(hg, P, eps, mode=mode, time_limit=time_limit,
+                              ub_masks=base.masks)
+        return base, rep
+    base = partition_heuristic(hg, P, eps, seed=seed)
+    max_replicas = 2 if mode == "dup" else None
+    # alternate replication local search with FM passes on the primary
+    # copies (the paper's ILP optimizes base assignment and replicas
+    # jointly; two-phase search alone gets stuck, cf. §C.1.1)
+    best = replicate_local_search(hg, base.masks.copy(), P, eps,
+                                  max_replicas=max_replicas, seed=seed)
+    for r in range(3):
+        masks = best.masks.copy()
+        # re-run FM treating each node's first replica as its home
+        primary = np.array([1 << (int(m).bit_length() - 1) for m in masks])
+        moved = _fm_refine(hg, primary.copy(), P, eps,
+                           np.random.default_rng(seed + r + 1))
+        cand = replicate_local_search(hg, moved, P, eps,
+                                      max_replicas=max_replicas,
+                                      seed=seed + r + 1)
+        if cand.cost < best.cost - 1e-12:
+            best = cand
+        else:
+            break
+    return base, best

@@ -1,0 +1,6 @@
+from .expert_placement import (PlacementResult, evaluate_plan,
+                               plan_expert_placement)
+from .remat_policy import RematDecision, plan_remat
+
+__all__ = ["PlacementResult", "evaluate_plan", "plan_expert_placement",
+           "RematDecision", "plan_remat"]

@@ -1,0 +1,17 @@
+from .bsp import BspInstance, Schedule
+from .exact import ExactScheduleResult, exact_schedule
+from .list_sched import (baseline_schedule, bspg_schedule, derive_comms,
+                         hill_climb, rebalance_comms)
+from .replication import (AdvancedOptions, advanced_heuristic,
+                          best_replicated_schedule,
+                          basic_heuristic, batch_replication_pass,
+                          superstep_merge_pass, superstep_replication_pass)
+
+__all__ = [
+    "BspInstance", "Schedule", "ExactScheduleResult", "exact_schedule",
+    "baseline_schedule", "bspg_schedule", "derive_comms", "hill_climb",
+    "rebalance_comms", "AdvancedOptions", "advanced_heuristic",
+    "basic_heuristic", "batch_replication_pass", "best_replicated_schedule",
+    "superstep_merge_pass",
+    "superstep_replication_pass",
+]

@@ -1,0 +1,286 @@
+"""Non-replicating baseline scheduler (the role of BSPg + hill climbing in
+Papp et al. [44], which the paper uses as the starting point in §6.1).
+
+``bspg_schedule``  -- wavefront list scheduling: nodes are placed level by
+level (ASAP topological depth); within a level, nodes are assigned greedily
+to the processor with the best (communication-affinity - load) score, under
+a per-level balance cap.  Communications are derived canonically afterwards:
+one comm per (value, consumer-processor), sourced at the computing processor
+and placed at the latest valid superstep (first use - 1).
+
+``hill_climb``     -- local search on the non-replicating schedule:
+  * comm re-placement within its valid window (h-relation balancing),
+  * node moves to a different processor in the same superstep,
+  * superstep merging when feasible *without* replication.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..hypergraph import Dag
+from .bsp import INF, BspInstance, Schedule
+
+
+def dag_levels(dag: Dag) -> list[int]:
+    level = [0] * dag.n
+    for v in dag.topo_order():
+        for c in dag.children[v]:
+            level[c] = max(level[c], level[v] + 1)
+    return level
+
+
+def bspg_schedule(inst: BspInstance, seed: int = 0, slack: float = 0.15) -> Schedule:
+    dag, P = inst.dag, inst.P
+    rng = np.random.default_rng(seed)
+    level = dag_levels(dag)
+    n_levels = max(level) + 1 if dag.n else 1
+    by_level: list[list[int]] = [[] for _ in range(n_levels)]
+    for v in range(dag.n):
+        by_level[level[v]].append(v)
+
+    sched = Schedule(inst, n_levels)
+    owner = np.full(dag.n, -1, dtype=np.int64)
+    for s, nodes in enumerate(by_level):
+        total_w = float(sum(dag.omega[v] for v in nodes))
+        cap = (1.0 + slack) * total_w / P + float(dag.omega.max())
+        load = np.zeros(P)
+        # heavy nodes first; random tiebreak
+        nodes = sorted(nodes, key=lambda v: (-dag.omega[v], rng.random()))
+        for v in nodes:
+            # affinity: communication we avoid by co-locating with parents
+            aff = np.zeros(P)
+            for u in dag.parents[v]:
+                aff[owner[u]] += inst.g * dag.mu[u]
+            score = aff - load * (total_w / P / max(cap, 1e-9))
+            # prefer procs under the cap
+            order = np.argsort(-score)
+            chosen = next((p for p in order if load[p] + dag.omega[v] <= cap),
+                          int(np.argmin(load)))
+            sched.add_comp(v, int(chosen), s)
+            owner[v] = chosen
+            load[chosen] += dag.omega[v]
+
+    derive_comms(sched)
+    return sched
+
+
+def derive_comms(sched: Schedule) -> None:
+    """(Re)build the canonical comm set for the current assignment."""
+    dag = sched.inst.dag
+    for (v, dst) in list(sched.comms.keys()):
+        sched.remove_comm(v, dst)
+    # first use of each (value, proc) pair by compute
+    first_use: dict[tuple[int, int], int] = {}
+    for c in range(dag.n):
+        for p, s in sched.assign[c].items():
+            for u in dag.parents[c]:
+                key = (u, p)
+                if key not in first_use or s < first_use[key]:
+                    first_use[key] = s
+    for (v, p), s_use in first_use.items():
+        if sched.compute_sstep(v, p) <= s_use:
+            continue  # locally computed in time
+        # source: the replica computed earliest
+        src, s_src = min(((pp, ss) for pp, ss in sched.assign[v].items()),
+                         key=lambda x: x[1])
+        assert s_src < s_use, f"value {v} for proc {p} not producible in time"
+        sched.add_comm(v, src, p, s_use - 1)
+
+
+# --------------------------------------------------------------------------
+# Hill climbing (non-replicating moves)
+# --------------------------------------------------------------------------
+
+def _comm_window(sched: Schedule, v: int, dst: int) -> tuple[int, int]:
+    src, _ = sched.comms[(v, dst)]
+    lo = sched.assign[v][src]  # computed on src at lo -> can send from lo on
+    first = sched.first_use_on(v, dst)
+    hi = int(first) - 1 if first is not INF else sched.S - 1
+    return lo, hi
+
+
+def rebalance_comms(sched: Schedule, max_passes: int = 4) -> bool:
+    """Move each comm within its window to the cheapest superstep."""
+    improved_any = False
+    for _ in range(max_passes):
+        improved = False
+        for (v, dst) in list(sched.comms.keys()):
+            src, s = sched.comms[(v, dst)]
+            lo, hi = _comm_window(sched, v, dst)
+            if hi < lo:
+                continue
+            base = sched.current_cost()
+            best_s, best_c = s, base
+            for t in range(lo, hi + 1):
+                if t == s:
+                    continue
+                sched.move_comm(v, dst, t)
+                c = sched.current_cost()
+                if c < best_c - 1e-12:
+                    best_c, best_s = c, t
+                sched.move_comm(v, dst, s)
+                sched.current_cost()
+            if best_s != s:
+                sched.move_comm(v, dst, best_s)
+                sched.current_cost()
+                improved = improved_any = True
+        if not improved:
+            break
+    return improved_any
+
+
+def try_node_move(sched: Schedule, v: int, q: int) -> bool:
+    """Move node v (single assignment) to processor q, same superstep."""
+    assert len(sched.assign[v]) == 1
+    (p, s), = sched.assign[v].items()
+    if q == p:
+        return False
+    dag = sched.inst.dag
+    # parents must be present on q at s
+    for u in dag.parents[v]:
+        if not sched.present_at(u, q, s):
+            return False
+    # v must not be used on p in superstep s itself (comm can't arrive in time)
+    uses_p = [t for t in sched.uses_on(v, p)]
+    if uses_p and min(uses_p) <= s:
+        return False
+    before = sched.current_cost()
+    log: list = []  # (fn, args) inverse ops
+    # retarget outgoing comms from p to q
+    for dst in list(sched.src_index.get((v, p), ())):
+        _, t = sched.comms[(v, dst)]
+        sched.remove_comm(v, dst)
+        log.append(("add_comm", (v, p, dst, t)))
+        if dst != q:
+            sched.add_comm(v, q, dst, t)
+            log.append(("remove_comm", (v, dst)))
+    # drop incoming comm to q (v becomes local there)
+    if (v, q) in sched.comms:
+        src0, t0 = sched.comms[(v, q)]
+        sched.remove_comm(v, q)
+        log.append(("add_comm", (v, src0, q, t0)))
+    sched.remove_comp(v, p)
+    log.append(("add_comp", (v, p, s)))
+    sched.add_comp(v, q, s)
+    log.append(("remove_comp", (v, q)))
+    # consumers on p now need a comm
+    if uses_p:
+        t_first = min(uses_p)
+        sched.add_comm(v, q, p, t_first - 1)
+        log.append(("remove_comm", (v, p)))
+    after = sched.current_cost()
+    if after < before - 1e-12:
+        return True
+    for fn, args in reversed(log):
+        getattr(sched, fn)(*args)
+    sched.current_cost()
+    return False
+
+
+def node_move_pass(sched: Schedule, seed: int = 0) -> bool:
+    rng = np.random.default_rng(seed)
+    improved = False
+    P = sched.inst.P
+    for v in rng.permutation(sched.inst.dag.n):
+        if len(sched.assign[v]) != 1:
+            continue
+        for q in range(P):
+            if try_node_move(sched, int(v), q):
+                improved = True
+                break
+    return improved
+
+
+def try_merge_no_repl(sched: Schedule, s: int) -> bool:
+    """Merge superstep s+1 into s if feasible without replication."""
+    if s + 1 >= sched.S:
+        return False
+    P = sched.inst.P
+    # comms at s whose value is used at s+1 must be movable to s-1
+    moves = []
+    for (v, dst), (src, t) in sched.comms.items():
+        if t != s:
+            continue
+        uses = [x for x in sched.uses_on(v, dst)
+                if x > t and not sched.compute_sstep(v, dst) <= x]
+        if uses and min(uses) == s + 1:
+            if sched.assign[v][src] <= s - 1 and s - 1 >= 0:
+                moves.append((v, dst))
+            else:
+                return False  # would need replication
+    before = sched.current_cost()
+    log: list = []
+    for (v, dst) in moves:
+        _, t = sched.comms[(v, dst)]
+        sched.move_comm(v, dst, s - 1)
+        log.append(("move_comm", (v, dst, t)))
+    # shift compute s+1 -> s
+    for p in range(P):
+        for v in list(sched.comp[s + 1][p]):
+            sched.remove_comp(v, p)
+            sched.add_comp(v, p, s)
+            log.append(("__move_comp_back", (v, p, s + 1)))
+    # shift comms at s+1 -> s
+    for (v, dst), (src, t) in list(sched.comms.items()):
+        if t == s + 1:
+            sched.move_comm(v, dst, s)
+            log.append(("move_comm", (v, dst, s + 1)))
+    after = sched.current_cost()
+    if after < before - 1e-12:
+        return True
+    for fn, args in reversed(log):
+        if fn == "__move_comp_back":
+            v, p, old_s = args
+            sched.remove_comp(v, p)
+            sched.add_comp(v, p, old_s)
+        else:
+            getattr(sched, fn)(*args)
+    sched.current_cost()
+    return False
+
+
+def merge_pass(sched: Schedule) -> bool:
+    improved = False
+    s = 0
+    while s < sched.S - 1:
+        if not try_merge_no_repl(sched, s):
+            s += 1
+        else:
+            improved = True
+    if improved:
+        sched.compact()
+    return improved
+
+
+def hill_climb(sched: Schedule, rounds: int = 6, seed: int = 0) -> Schedule:
+    for r in range(rounds):
+        improved = False
+        improved |= rebalance_comms(sched)
+        improved |= node_move_pass(sched, seed=seed + r)
+        improved |= merge_pass(sched)
+        if not improved:
+            break
+    sched.compact()
+    return sched
+
+
+def sequential_schedule(inst: BspInstance) -> Schedule:
+    """Everything on processor 0, one superstep, zero communication."""
+    sched = Schedule(inst, 1)
+    for v in inst.dag.topo_order():
+        sched.add_comp(v, 0, 0)
+    return sched
+
+
+def baseline_schedule(inst: BspInstance, seed: int = 0, hc_rounds: int = 6,
+                      restarts: int = 1) -> Schedule:
+    """Strong non-replicating baseline: best of list-scheduling restarts
+    (each followed by hill climbing) and the sequential schedule (often
+    optimal for tiny DAGs with large g, cf. paper §C.2.2)."""
+    best = sequential_schedule(inst)
+    for r in range(restarts):
+        sched = bspg_schedule(inst, seed=seed + r)
+        sched = hill_climb(sched, rounds=hc_rounds, seed=seed + r)
+        if sched.current_cost() < best.current_cost() - 1e-12:
+            best = sched
+    return best

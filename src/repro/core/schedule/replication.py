@@ -1,0 +1,350 @@
+"""Replication heuristics for BSP schedules (paper §6.2).
+
+``basic_heuristic``     -- §6.2.2: replace single communication steps by a
+                           replication whenever that decreases the total cost.
+``advanced_heuristic``  -- §6.2.3: iterates three larger moves until fixpoint:
+    * batch replication (BR): remove at least one comm from every processor
+      saturating the h-relation of a superstep, simultaneously;
+    * superstep merging (SM): merge consecutive supersteps, replicating
+      (recursively) the values that could not otherwise arrive in time;
+    * superstep replication (SR): replicate a whole compute phase V_{p1,s}
+      on another processor p2.
+
+All moves are evaluated against the exact BSP cost; only strictly improving
+moves are kept.  Between rounds the schedule is cleaned (useless comms
+pruned, empty supersteps compacted), mirroring the paper's §C.2.1 remark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .bsp import INF, Schedule
+
+
+# ----------------------------------------------------------- basic heuristic
+
+def _replication_window(sched: Schedule, v: int, dst: int) -> tuple[int, int]:
+    """Valid supersteps to replicate v on dst, ignoring its current comm.
+
+    earliest: all parents present; latest: first use of v on dst.
+    """
+    e = sched.earliest_replication(v, dst)
+    if e == INF:  # some parent never becomes available on dst
+        return 1, 0
+    first = sched.first_use_on(v, dst)
+    hi = int(first) if first is not INF else sched.S - 1
+    return int(e), min(hi, sched.S - 1)
+
+
+def _best_replication_sstep(sched: Schedule, v: int, dst: int) -> tuple[int, float] | None:
+    """Cheapest superstep (by compute-cost increase) to replicate v on dst."""
+    lo, hi = _replication_window(sched, v, dst)
+    if lo > hi:
+        return None
+    w = sched.inst.dag.omega[v]
+    best_t, best_inc = None, INF
+    for t in range(lo, hi + 1):
+        cur_max = sched.work[t].max()
+        inc = max(0.0, sched.work[t, dst] + w - cur_max)
+        if inc < best_inc - 1e-12:
+            best_inc, best_t = inc, t
+        if inc <= 1e-12:
+            break  # cannot do better than free
+    return (best_t, best_inc) if best_t is not None else None
+
+
+def try_replicate_for_comm(sched: Schedule, v: int, dst: int) -> bool:
+    """Basic move: drop comm (v -> dst), replicate v on dst instead."""
+    if dst in sched.assign[v]:
+        return False
+    cand = _best_replication_sstep(sched, v, dst)
+    if cand is None:
+        return False
+    t, _ = cand
+    src, s_comm = sched.comms[(v, dst)]
+    before = sched.current_cost()
+    sched.remove_comm(v, dst)
+    sched.add_comp(v, dst, t)
+    after = sched.current_cost()
+    if after < before - 1e-12:
+        return True
+    sched.remove_comp(v, dst)
+    sched.add_comm(v, src, dst, s_comm)
+    sched.current_cost()
+    return False
+
+
+def basic_heuristic(sched: Schedule, max_passes: int = 50) -> Schedule:
+    for _ in range(max_passes):
+        improved = False
+        for (v, dst) in list(sched.comms.keys()):
+            if (v, dst) not in sched.comms:
+                continue
+            if try_replicate_for_comm(sched, v, dst):
+                improved = True
+        if not improved:
+            break
+    sched.prune_useless_comms()
+    sched.compact()
+    return sched
+
+
+# -------------------------------------------------------- batch replication
+
+def batch_replication_pass(sched: Schedule) -> bool:
+    """BR: per superstep, simultaneously remove one comm from every
+    saturated send/recv side, replicating the carried values."""
+    improved_any = False
+    for s in range(sched.S):
+        while True:
+            h = max(sched.sent[s].max(), sched.recv[s].max())
+            if h <= 1e-12:
+                break
+            comms_at_s = [(v, dst, src) for (v, dst), (src, t) in sched.comms.items()
+                          if t == s]
+            if not comms_at_s:
+                break
+            sat = [("sent", p) for p in range(sched.inst.P)
+                   if sched.sent[s, p] >= h - 1e-12] + \
+                  [("recv", p) for p in range(sched.inst.P)
+                   if sched.recv[s, p] >= h - 1e-12]
+            before = sched.current_cost()
+            log: list = []
+            chosen: set[tuple[int, int]] = set()
+            feasible = True
+            for side, p in sat:
+                # already covered by a chosen comm?
+                covered = any((side == "sent" and src == p) or
+                              (side == "recv" and dst == p)
+                              for (v, dst) in chosen
+                              for (vv, dd, src) in comms_at_s
+                              if (vv, dd) == (v, dst))
+                if covered:
+                    continue
+                # cheapest replication among comms on this side
+                best = None
+                for (v, dst, src) in comms_at_s:
+                    if (v, dst) in chosen or (v, dst) not in sched.comms:
+                        continue
+                    if (side == "sent" and src != p) or (side == "recv" and dst != p):
+                        continue
+                    if dst in sched.assign[v]:
+                        continue
+                    cand = _best_replication_sstep(sched, v, dst)
+                    if cand is None:
+                        continue
+                    if best is None or cand[1] < best[2]:
+                        best = (v, dst, cand[1], cand[0], src)
+                if best is None:
+                    feasible = False
+                    break
+                v, dst, _, t, src = best
+                s_comm = sched.comms[(v, dst)][1]
+                sched.remove_comm(v, dst)
+                sched.add_comp(v, dst, t)
+                log.append((v, dst, src, s_comm))
+                chosen.add((v, dst))
+            after = sched.current_cost()
+            if feasible and chosen and after < before - 1e-12:
+                improved_any = True
+                continue  # try to shave the new maximum too
+            for (v, dst, src, s_comm) in reversed(log):
+                sched.remove_comp(v, dst)
+                sched.add_comm(v, src, dst, s_comm)
+            sched.current_cost()
+            break
+    return improved_any
+
+
+# --------------------------------------------------------- superstep merging
+
+def _ensure_present_for_merge(sched: Schedule, v: int, dst: int, s: int) -> bool:
+    """Make value v usable on dst within merged superstep s, replicating
+    recursively when the producer sits in superstep s itself (paper SM).
+    Mutates sched; returns False if impossible (caller works on a copy)."""
+    if sched.present_at(v, dst, s):
+        return True
+    cs_any = min(sched.assign[v].values())
+    if cs_any <= s - 1 and s - 1 >= 0 and (v, dst) not in sched.comms:
+        src = min(sched.assign[v], key=lambda p: sched.assign[v][p])
+        sched.add_comm(v, src, dst, s - 1)
+        return True
+    # must replicate v on dst at superstep s -> parents must be available too
+    if dst in sched.assign[v]:
+        return False  # computed later on dst; moving it up is out of scope
+    for u in sched.inst.dag.parents[v]:
+        if not _ensure_present_for_merge(sched, u, dst, s):
+            return False
+    sched.add_comp(v, dst, s)
+    return True
+
+
+def try_merge_with_replication(sched: Schedule, s: int) -> Schedule | None:
+    """Attempt to merge superstep s+1 into s (SM).  Returns the improved
+    schedule copy, or None."""
+    if s + 1 >= sched.S:
+        return None
+    trial = sched.copy()
+    P = trial.inst.P
+    # handle comms at s whose value is used at s+1
+    for (v, dst), (src, t) in list(trial.comms.items()):
+        if t != s:
+            continue
+        uses = [x for x in trial.uses_on(v, dst)
+                if x > t and not trial.compute_sstep(v, dst) <= x]
+        if not uses or min(uses) > s + 1:
+            continue  # stays in merged superstep, delivers for >= s+2
+        if trial.assign[v].get(src, INF) <= s - 1 and s - 1 >= 0:
+            trial.move_comm(v, dst, s - 1)
+            continue
+        # replicate v (and recursively its parents) on dst
+        trial.remove_comm(v, dst)
+        if not _ensure_present_for_merge(trial, v, dst, s):
+            return None
+    # move compute s+1 -> s
+    for p in range(P):
+        for v in list(trial.comp[s + 1][p]):
+            trial.remove_comp(v, p)
+            if p in trial.assign[v]:
+                return None  # already replicated there during merge
+            trial.add_comp(v, p, s)
+    # move comms at s+1 -> s
+    for (v, dst), (src, t) in list(trial.comms.items()):
+        if t == s + 1:
+            trial.move_comm(v, dst, s)
+    trial.prune_useless_comms()
+    if trial.current_cost() < sched.current_cost() - 1e-12:
+        trial.compact()
+        return trial
+    return None
+
+
+def superstep_merge_pass(sched: Schedule) -> tuple[Schedule, bool]:
+    improved = False
+    s = 0
+    while s < sched.S - 1:
+        out = try_merge_with_replication(sched, s)
+        if out is not None:
+            sched = out
+            improved = True
+            # stay at the same index: maybe merge further
+        else:
+            s += 1
+    return sched, improved
+
+
+# ------------------------------------------------------ superstep replication
+
+def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> Schedule | None:
+    """SR: replicate (the useful part of) V_{p1,s} onto p2."""
+    nodes = [v for v in sched.comp[s][p1]
+             if p2 not in sched.assign[v] and sched.uses_on(v, p2)]
+    if not nodes:
+        return None
+    trial = sched.copy()
+    for v in nodes:
+        # parents must be present on p2 by superstep s
+        ok = True
+        for u in trial.inst.dag.parents[v]:
+            if trial.present_at(u, p2, s):
+                continue
+            if u in nodes and trial.assign[u].get(p1) == s:
+                continue  # replicated alongside
+            cs_any = min(trial.assign[u].values())
+            if cs_any <= s - 1 and s - 1 >= 0 and (u, p2) not in trial.comms:
+                src = min(trial.assign[u], key=lambda p: trial.assign[u][p])
+                trial.add_comm(u, src, p2, s - 1)
+            else:
+                ok = False
+                break
+        if not ok:
+            return None
+        if (v, p2) in trial.comms:
+            cm_s = trial.comms[(v, p2)][1]
+            if cm_s >= s:  # arriving later than the replica -> drop the comm
+                trial.remove_comm(v, p2)
+        trial.add_comp(v, p2, s)
+    trial.prune_useless_comms()
+    if trial.current_cost() < sched.current_cost() - 1e-12:
+        return trial
+    return None
+
+
+def superstep_replication_pass(sched: Schedule) -> tuple[Schedule, bool]:
+    improved = False
+    P = sched.inst.P
+    s = 0
+    while s < sched.S:
+        done = False
+        for p1 in range(P):
+            for p2 in range(P):
+                if p1 == p2:
+                    continue
+                out = try_superstep_replication(sched, s, p1, p2)
+                if out is not None:
+                    sched = out
+                    improved = done = True
+                    break
+            if done:
+                break
+        if not done:
+            s += 1
+    return sched, improved
+
+
+# ------------------------------------------------------------------- drivers
+
+def best_replicated_schedule(inst, baseline: Schedule | None = None,
+                             opts: "AdvancedOptions | None" = None,
+                             seed: int = 0) -> Schedule:
+    """Run the advanced heuristic from the best non-replicating schedule AND
+    from the parallel list schedule.  The latter matters when the
+    non-replicating optimum degenerates to few processors (e.g. the paper's
+    Appendix A.1 bipartite example, where only a parallel seed gives the
+    replication moves room to work); beyond-paper addition.
+    """
+    from .list_sched import baseline_schedule, bspg_schedule, hill_climb
+
+    if baseline is None:
+        baseline = baseline_schedule(inst, seed=seed)
+    cands = [advanced_heuristic(baseline.copy(), opts)]
+    par = hill_climb(bspg_schedule(inst, seed=seed), seed=seed)
+    cands.append(advanced_heuristic(par, opts))
+    return min(cands, key=lambda s: s.current_cost())
+
+
+@dataclasses.dataclass
+class AdvancedOptions:
+    batch_replication: bool = True
+    superstep_merging: bool = True
+    superstep_replication: bool = True
+    max_rounds: int = 8
+
+
+def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> Schedule:
+    opts = opts or AdvancedOptions()
+    sched = basic_heuristic(sched)
+    for _ in range(opts.max_rounds):
+        improved = False
+        # SM before BR: batch replication fills compute slack that merging
+        # would otherwise exploit (ablations show SM is the bigger lever,
+        # cf. paper Table 14)
+        if opts.superstep_merging:
+            sched, imp = superstep_merge_pass(sched)
+            improved |= imp
+        if opts.batch_replication:
+            improved |= batch_replication_pass(sched)
+        if opts.superstep_replication:
+            sched, imp = superstep_replication_pass(sched)
+            improved |= imp
+        # interleave the basic move as cleanup (cheap local improvements)
+        before = sched.current_cost()
+        sched = basic_heuristic(sched, max_passes=5)
+        improved |= sched.current_cost() < before - 1e-12
+        if not improved:
+            break
+    sched.prune_useless_comms()
+    sched.compact()
+    return sched

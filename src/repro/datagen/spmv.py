@@ -1,0 +1,84 @@
+"""SpMV hypergraphs: fine-grained and row-net models (paper §3.2, §B.1).
+
+The paper samples application matrices from SuiteSparse; offline we generate
+sparse matrices with application-like structure (banded diagonals + random
+off-band fill + a few dense rows/columns, the patterns partitioners care
+about) and apply the two standard hypergraph constructions:
+
+  * fine-grained [24, 27]: one node per non-zero; one hyperedge per row and
+    one per column, connecting the non-zeros it contains;
+  * row-net [10]: one node per column (weight = its non-zero count); one
+    hyperedge per row, connecting the columns with a non-zero in that row.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.hypergraph import Hypergraph
+
+
+def synthetic_sparse_matrix(n_rows: int, n_cols: int, seed: int = 0,
+                            band: int = 3, fill: float = 0.01,
+                            n_dense: int = 2) -> list[tuple[int, int]]:
+    """Return the non-zero coordinate list of an application-like matrix."""
+    rng = np.random.default_rng(seed)
+    nz: set[tuple[int, int]] = set()
+    # banded structure (stencil-like applications)
+    for i in range(n_rows):
+        for off in range(-band, band + 1):
+            j = i + off
+            if 0 <= j < n_cols and rng.random() < 0.7:
+                nz.add((i, j))
+    # random fill (irregular coupling)
+    n_fill = int(fill * n_rows * n_cols)
+    rows = rng.integers(0, n_rows, size=n_fill)
+    cols = rng.integers(0, n_cols, size=n_fill)
+    nz.update(zip(rows.tolist(), cols.tolist()))
+    # a few dense rows/columns (constraints, hubs)
+    for _ in range(n_dense):
+        r = int(rng.integers(0, n_rows))
+        for j in rng.choice(n_cols, size=max(2, n_cols // 6), replace=False):
+            nz.add((r, int(j)))
+        c = int(rng.integers(0, n_cols))
+        for i in rng.choice(n_rows, size=max(2, n_rows // 6), replace=False):
+            nz.add((int(i), c))
+    return sorted(nz)
+
+
+def fine_grained_hypergraph(nz: list[tuple[int, int]], name: str = "spmv_fg") -> Hypergraph:
+    n = len(nz)
+    rows: dict[int, list[int]] = {}
+    cols: dict[int, list[int]] = {}
+    for idx, (i, j) in enumerate(nz):
+        rows.setdefault(i, []).append(idx)
+        cols.setdefault(j, []).append(idx)
+    edges = [tuple(v) for v in rows.values() if len(v) >= 2]
+    edges += [tuple(v) for v in cols.values() if len(v) >= 2]
+    return Hypergraph(n=n, edges=edges, name=name).remove_isolated()
+
+
+def row_net_hypergraph(nz: list[tuple[int, int]], n_cols: int,
+                       name: str = "spmv_rn") -> Hypergraph:
+    rows: dict[int, list[int]] = {}
+    col_nnz = np.zeros(n_cols, dtype=np.float64)
+    for (i, j) in nz:
+        rows.setdefault(i, []).append(j)
+        col_nnz[j] += 1
+    edges = [tuple(sorted(set(v))) for v in rows.values() if len(set(v)) >= 2]
+    omega = np.maximum(col_nnz, 1.0)  # node weight = nnz in the column [10]
+    return Hypergraph(n=n_cols, edges=edges, omega=omega, name=name).remove_isolated()
+
+
+def spmv_dataset(kind: str = "fg", count: int = 10, seed: int = 0,
+                 sizes: tuple[int, int] = (30, 90)) -> list[Hypergraph]:
+    """A dataset of `count` instances with paper-like size spread."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for k in range(count):
+        m = int(rng.integers(sizes[0], sizes[1]))
+        nz = synthetic_sparse_matrix(m, m, seed=seed * 1000 + k)
+        if kind == "fg":
+            out.append(fine_grained_hypergraph(nz, name=f"spmv_fg_{k}"))
+        else:
+            out.append(row_net_hypergraph(nz, m, name=f"spmv_rn_{k}"))
+    return out

@@ -1,0 +1,87 @@
+"""Mamba1 selective scan for TPU (Pallas).
+
+TPU adaptation of the CUDA selective-scan: the grid iterates (batch,
+seq-chunks) with TPU's sequential grid semantics; the recurrent state
+h (d_inner, N) lives in VMEM scratch and is carried across chunk steps
+(re-initialized whenever the batch index advances).  Within a chunk the
+recurrence runs as an on-chip fori_loop over time steps: each step is a
+VPU-friendly (di, N) elementwise update followed by a row reduction.
+
+Layout: d_inner is the lane dimension (multiples of 128 on real shapes);
+the tiny state dim N (=16) stays in sublanes.  Validated with
+interpret=True against ref.mamba_scan_reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, last_ref,
+            h_ref, *, chunk: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = A_ref[...]                       # (di, N) f32
+    Dskip = D_ref[...]                   # (di,)
+
+    def step(t, h):
+        u_t = u_ref[0, t, :].astype(jnp.float32)        # (di,)
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)      # (di,)
+        B_t = B_ref[0, t, :].astype(jnp.float32)        # (N,)
+        C_t = C_ref[0, t, :].astype(jnp.float32)        # (N,)
+        dA = jnp.exp(dt_t[:, None] * A)                 # (di, N)
+        h = dA * h + (dt_t * u_t)[:, None] * B_t[None, :]
+        y = (h * C_t[None, :]).sum(axis=1) + u_t * Dskip
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(c == n_chunks - 1)
+    def _emit_state():
+        last_ref[0, :, :] = h_ref[...]
+
+
+def mamba_scan(u, dt, A, Bc, Cc, D, *, chunk: int = 64,
+               interpret: bool = False):
+    """u/dt: (B, S, di); A: (di, N); Bc/Cc: (B, S, N); D: (di,).
+    Returns (y (B,S,di), last_state (B,di,N) f32)."""
+    B, S, di = u.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to the chunk size"
+    n_chunks = S // chunk
+    grid = (B, n_chunks)
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((di, N), lambda b, c: (0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((di,), lambda b, c: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, di, N), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), u.dtype),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((di, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, Bc, Cc, D)
+    return y, last

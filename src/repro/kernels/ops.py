@@ -1,0 +1,57 @@
+"""Jit'd wrappers dispatching between Pallas TPU kernels and jnp references.
+
+The Pallas kernels target TPU (MXU-aligned BlockSpecs, VMEM tiling); they do
+not lower on the CPU backend, so dispatch is by platform (overridable with
+``force(...)`` for interpret-mode testing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+
+_FORCE: str | None = None  # None = auto, 'pallas' | 'ref'
+
+
+def force(which: str | None) -> None:
+    global _FORCE
+    _FORCE = which
+
+
+def _use_pallas() -> bool:
+    if _FORCE is not None:
+        return _FORCE == "pallas"
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=0, q_pos=None, k_pos=None,
+              scale=None):
+    if _use_pallas() and window == 0 and q_pos is None and k_pos is None:
+        from .flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, scale=scale)
+    return ref.attention_reference(q, k, v, causal=causal, window=window,
+                                   q_pos=q_pos, k_pos=k_pos, scale=scale)
+
+
+def mamba_scan(u, dt, A, Bc, Cc, D, init_state=None):
+    if _use_pallas() and init_state is None:
+        from .mamba_scan import mamba_scan as pallas_scan
+        return pallas_scan(u, dt, A, Bc, Cc, D)
+    return ref.mamba_scan_reference(u, dt, A, Bc, Cc, D, init_state=init_state)
+
+
+def grouped_matmul(x, w, group_sizes):
+    return ref.grouped_matmul_reference(x, w, group_sizes)
+
+
+def grouped_matmul_aligned(x, w, capacity: int):
+    """Block-aligned layout (G*capacity rows): Pallas-eligible fast path."""
+    import jax.numpy as jnp
+    if _use_pallas():
+        from .moe_gmm import grouped_matmul as pallas_gmm
+        return pallas_gmm(x, w, capacity)
+    G = w.shape[0]
+    sizes = jnp.full((G,), capacity, jnp.int32)
+    return ref.grouped_matmul_reference(x, w, sizes)

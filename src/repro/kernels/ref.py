@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic references: the Pallas kernels must match them
+(``tests/test_kernels.py`` sweeps shapes/dtypes with interpret=True), and
+they are also the XLA execution path on non-TPU backends (the dry-run
+lowers these; Pallas TPU kernels do not lower on the CPU backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Sk, KV, hd)
+    v: jax.Array,            # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,         # 0 = full; >0 = sliding window
+    q_pos: jax.Array | None = None,   # (B, Sq) absolute positions
+    k_pos: jax.Array | None = None,   # (B, Sk) absolute positions (<0 = pad)
+    scale: float | None = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    if k_pos is None:
+        k_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (B, k.shape[1]))
+    qf = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qf, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = k_pos[:, None, None, None, :] >= 0
+    if causal:
+        mask &= q_pos[:, None, None, :, None] >= k_pos[:, None, None, None, :]
+    if window:
+        mask &= (q_pos[:, None, None, :, None]
+                 - k_pos[:, None, None, None, :]) < window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def mamba_scan_reference(
+    u: jax.Array,        # (B, S, di)    input sequence
+    dt: jax.Array,       # (B, S, di)    softplus'd step sizes
+    A: jax.Array,        # (di, N)       negative-definite state matrix (=-exp(A_log))
+    Bc: jax.Array,       # (B, S, N)     input->state projection (per step)
+    Cc: jax.Array,       # (B, S, N)     state->output projection (per step)
+    D: jax.Array,        # (di,)         skip connection
+    init_state: jax.Array | None = None,   # (B, di, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Selective scan (mamba1): h' = exp(dt*A) h + dt*B u ; y = C h + D u."""
+    B, S, di = u.shape
+    N = A.shape[1]
+    if init_state is None:
+        init_state = jnp.zeros((B, di, N), dtype=jnp.float32)
+
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None, None])  # (B,S,di,N)
+    dBu = (dt.astype(jnp.float32) * u.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[:, :, None, :]                      # (B,S,di,N)
+
+    def step(h, xs):
+        da, dbu, c = xs
+        h = da * h + dbu
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0),
+          jnp.moveaxis(Cc.astype(jnp.float32), 1, 0))
+    last, ys = jax.lax.scan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u.astype(jnp.float32) * D[None, None]
+    return y.astype(u.dtype), last
+
+
+def grouped_matmul_reference(
+    x: jax.Array,            # (T, D) tokens sorted by group
+    w: jax.Array,            # (G, D, F) one matrix per group
+    group_sizes: jax.Array,  # (G,) int32, sum == T
+) -> jax.Array:
+    """Block-diagonal GEMM: rows of x hit the weight of their group."""
+    T, D = x.shape
+    G, _, F = w.shape
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(T)
+    gid = jnp.sum(row[:, None] >= ends[None, :], axis=1)  # group of each row
+    wx = w[gid]                                           # (T, D, F) gather
+    return jnp.einsum("td,tdf->tf", x, wx,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

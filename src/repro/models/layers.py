@@ -1,0 +1,316 @@
+"""Transformer / SSM layer implementations (pure functions over param trees).
+
+Every block comes in two entry points:
+  * ``*_block(params, x, cfg, seg)``            -- train / prefill (full seq)
+  * ``*_block_decode(params, x, cfg, seg, cache, pos)`` -- one-token decode
+
+Caches are functional (returned updated).  Attention math is routed through
+``repro.kernels.ops`` (Pallas on TPU, jnp reference elsewhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..parallel.sharding import batch_axes, constrain
+from .config import ModelConfig, Segment
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w).astype(x.dtype)
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); pos: (B, S) absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------- attention
+
+def _positions(B: int, S: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+
+def n_q_heads(cfg: ModelConfig) -> int:
+    """Physical q-head count (optionally padded per-kv-group so the head
+    dim divides the model axis; pad heads are masked to zero)."""
+    return cfg.n_heads_padded or cfg.n_heads
+
+
+def head_mask(cfg: ModelConfig, dtype) -> jax.Array | None:
+    Hp = n_q_heads(cfg)
+    if Hp == cfg.n_heads:
+        return None
+    g_pad = Hp // cfg.n_kv_heads
+    g_real = cfg.n_heads // cfg.n_kv_heads
+    mask = (jnp.arange(Hp) % g_pad) < g_real
+    return mask.astype(dtype)[None, None, :, None]
+
+
+def gqa_project(p: dict, x: jax.Array, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    Hp = n_q_heads(cfg)
+    q = jnp.einsum("bsd,dn->bsn", x, p["wq"]).reshape(B, S, Hp, hd)
+    k = jnp.einsum("bsd,dn->bsn", x, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dn->bsn", x, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def gqa_attention(p: dict, x: jax.Array, cfg: ModelConfig, seg: Segment):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = gqa_project(p, x, cfg)
+    pos = _positions(B, S)
+    q, k = rope(q, pos, cfg.rope_theta), rope(k, pos, cfg.rope_theta)
+    out = ops.attention(q, k, v, causal=seg.causal,
+                        window=seg.sliding_window)
+    hm = head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm
+    out = out.reshape(B, S, n_q_heads(cfg) * cfg.hd)
+    return jnp.einsum("bsn,nd->bsd", out, p["wo"])
+
+
+def gqa_init_cache(cfg: ModelConfig, seg: Segment, B: int, max_len: int,
+                   dtype) -> dict:
+    L = max_len if not seg.sliding_window else min(seg.sliding_window, max_len)
+    return {
+        "k": jnp.zeros((B, L, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((B, L, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def gqa_prefill_cache(p, x, cfg: ModelConfig, seg: Segment, max_len: int):
+    """Build the decode cache from a prefilled sequence."""
+    B, S, _ = x.shape
+    _, k, v = gqa_project(p, x, cfg)
+    pos = _positions(B, S)
+    k = rope(k, pos, cfg.rope_theta)
+    if seg.sliding_window:
+        W = min(seg.sliding_window, max_len)
+        pad = max(0, W - S)
+
+        def fit(t):  # ring semantics: keep the last W, left-pad if short
+            return (t[:, -W:] if S >= W
+                    else jnp.pad(t, ((0, 0), (pad, 0), (0, 0), (0, 0))))
+    else:
+        def fit(t):  # linear cache: position i lives at index i
+            return jnp.pad(t, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+    return {"k": fit(k), "v": fit(v)}
+
+
+def gqa_attention_decode(p: dict, x: jax.Array, cfg: ModelConfig, seg: Segment,
+                         cache: dict, pos: jax.Array):
+    """x: (B, 1, D); pos: scalar int32 -- index of the new token."""
+    B = x.shape[0]
+    q, k_new, v_new = gqa_project(p, x, cfg)
+    pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
+    q = rope(q, pos_b, cfg.rope_theta)
+    k_new = rope(k_new, pos_b, cfg.rope_theta)
+    if seg.sliding_window:
+        W = cache["k"].shape[1]
+        k = jnp.concatenate([cache["k"][:, 1:], k_new], axis=1)
+        v = jnp.concatenate([cache["v"][:, 1:], v_new], axis=1)
+        k_pos = pos - W + 1 + jnp.arange(W)
+        k_pos = jnp.broadcast_to(k_pos[None], (B, W))
+        new_cache = {"k": k, "v": v}
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+        k_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (B, k.shape[1]))
+        new_cache = {"k": k, "v": v}
+    out = ops.attention(q, k, v, causal=True, window=0,
+                        q_pos=pos_b, k_pos=k_pos)
+    hm = head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm
+    out = out.reshape(B, 1, n_q_heads(cfg) * cfg.hd)
+    return jnp.einsum("bsn,nd->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------- MLA
+
+def _mla_dims(cfg: ModelConfig):
+    return (cfg.q_lora_rank, cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+            cfg.qk_rope_head_dim, cfg.v_head_dim)
+
+
+def mla_project_q(p, x, cfg):
+    B, S, _ = x.shape
+    qr, kvr, nope, rp, vh = _mla_dims(cfg)
+    ql = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rn->bsn", ql, p["wq_b"])
+    q = q.reshape(B, S, cfg.n_heads, nope + rp)
+    return q[..., :nope], q[..., nope:]
+
+
+def mla_latent(p, x, cfg):
+    """Compressed kv latent + decoupled rope key (the cached quantities)."""
+    kvr, rp = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv = rmsnorm(kv[..., :kvr], p["kv_ln"], cfg.norm_eps)
+    k_rope = kv[..., kvr:]
+    return ckv, k_rope
+
+
+def mla_attention(p: dict, x: jax.Array, cfg: ModelConfig, seg: Segment):
+    B, S, _ = x.shape
+    qr, kvr, nope, rp, vh = _mla_dims(cfg)
+    H = cfg.n_heads
+    q_nope, q_rope = mla_project_q(p, x, cfg)
+    ckv, k_rope = mla_latent(p, x, cfg)
+    pos = _positions(B, S)
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+    k_rope = rope(k_rope[:, :, None, :], pos, cfg.rope_theta)  # single head
+    kv = jnp.einsum("bsr,rn->bsn", ckv, p["wkv_b"]).reshape(B, S, H, nope + vh)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rp))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (nope + rp) ** -0.5
+    out = ops.attention(q, k, v, causal=seg.causal, scale=scale)
+    out = out.reshape(B, S, H * vh)
+    return jnp.einsum("bsn,nd->bsd", out, p["mla_wo"])
+
+
+def mla_init_cache(cfg: ModelConfig, B: int, max_len: int, dtype) -> dict:
+    return {
+        "ckv": jnp.zeros((B, max_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((B, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill_cache(p, x, cfg: ModelConfig, max_len: int):
+    B, S, _ = x.shape
+    ckv, k_rope = mla_latent(p, x, cfg)
+    pos = _positions(B, S)
+    k_rope = rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    pad = max_len - S
+    return {
+        "ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
+        "kr": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+    }
+
+
+def mla_attention_decode(p, x, cfg: ModelConfig, cache: dict, pos: jax.Array,
+                         absorb: bool = True):
+    B = x.shape[0]
+    qr, kvr, nope, rp, vh = _mla_dims(cfg)
+    H = cfg.n_heads
+    q_nope, q_rope = mla_project_q(p, x, cfg)  # (B,1,H,*)
+    pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
+    q_rope = rope(q_rope, pos_b, cfg.rope_theta)
+    ckv_new, kr_new = mla_latent(p, x, cfg)
+    kr_new = rope(kr_new[:, :, None, :], pos_b, cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new, pos, axis=1)
+    new_cache = {"ckv": ckv, "kr": kr}
+    Sk = ckv.shape[1]
+    mask = (jnp.arange(Sk)[None] <= pos)[:, None, None, :]  # (1,1,1,Sk)
+    scale = (nope + rp) ** -0.5
+    wkv_b = p["wkv_b"].reshape(kvr, H, nope + vh)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    if absorb:
+        # fold W_UK into the query, attend in latent space (decode-optimal)
+        q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)      # (B,1,H,kvr)
+        s = jnp.einsum("bqhr,bsr->bhqs", q_eff, ckv,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bqhr,bsr->bhqs", q_rope, kr,
+                        preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s * scale, -1e30)
+        pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", pattn, ckv)          # latent ctx
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)
+    else:
+        # naive: expand every cached latent to full K/V each step
+        kv = jnp.einsum("bsr,rn->bsn", ckv, p["wkv_b"]).reshape(B, Sk, H, nope + vh)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, Sk, H, rp))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        s = jnp.einsum("bqhn,bshn->bhqs", q, k,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s * scale, -1e30)
+        pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshv->bqhv", pattn, v)
+    out = out.reshape(B, 1, H * vh)
+    return jnp.einsum("bsn,nd->bsd", out, p["mla_wo"]), new_cache
+
+
+# ---------------------------------------------------------------- cross-attn
+
+def cross_attention(p: dict, x: jax.Array, img: jax.Array, cfg: ModelConfig):
+    """Text queries attend to (stub) image embeddings; tanh-gated residual."""
+    B, S, _ = x.shape
+    N = img.shape[1]
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dn->bsn", x, p["cross_wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum("bnd,dm->bnm", img, p["cross_wk"]).reshape(B, N, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bnd,dm->bnm", img, p["cross_wv"]).reshape(B, N, cfg.n_kv_heads, hd)
+    out = ops.attention(q, k, v, causal=False)
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    out = jnp.einsum("bsn,nd->bsd", out, p["cross_wo"])
+    return jnp.tanh(p["gate"]).astype(out.dtype) * out
+
+
+# --------------------------------------------------------------------- mamba
+
+def mamba_mixer(p: dict, x: jax.Array, cfg: ModelConfig,
+                state: dict | None = None):
+    """Mamba1 mixer.  x: (B, S, D).  state: {'conv': (B, d_conv-1, di),
+    'ssm': (B, di, N)} for stepwise decode (S==1)."""
+    B, S, _ = x.shape
+    di, N, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    xz = jnp.einsum("bsd,dn->bsn", x, p["in_proj"])
+    u, z = xz[..., :di], xz[..., di:]
+    # depthwise causal conv along S
+    if state is None:
+        u_pad = jnp.pad(u, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+        new_conv = u_pad[:, -(cfg.d_conv - 1):, :] if cfg.d_conv > 1 else None
+    else:
+        u_pad = jnp.concatenate([state["conv"], u], axis=1)
+        new_conv = u_pad[:, -(cfg.d_conv - 1):, :]
+    idx = jnp.arange(S)[:, None] + jnp.arange(cfg.d_conv)[None, :]
+    windows = u_pad[:, idx, :]                      # (B, S, d_conv, di)
+    u_conv = jnp.einsum("bskn,kn->bsn", windows, p["conv_w"]) + p["conv_b"]
+    u_conv = jax.nn.silu(u_conv)
+    # input-dependent SSM parameters
+    xproj = jnp.einsum("bsn,nm->bsm", u_conv, p["x_proj"])
+    dt = jax.nn.softplus(jnp.einsum("bsr,rn->bsn", xproj[..., :r],
+                                    p["dt_proj"]) + p["dt_bias"])
+    Bc, Cc = xproj[..., r:r + N], xproj[..., r + N:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    init = state["ssm"] if state is not None else None
+    y, last = ops.mamba_scan(u_conv, dt, A, Bc, Cc, p["ssm_D"], init_state=init)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsn,nd->bsd", y, p["out_proj"])
+    new_state = {"conv": new_conv, "ssm": last}
+    return out, new_state
+
+
+def mamba_init_cache(cfg: ModelConfig, B: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((B, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,563 @@
+"""Unified model: segmented scan over homogeneous layer stacks.
+
+Supports every assigned architecture family: dense GQA decoders, MLA+MoE
+(deepseek-v3 incl. MTP), encoder-only (hubert), cross-attention VLM groups
+(llama-3.2-vision), mamba1 (falcon-mamba) and parallel attention+SSM hybrid
+(hymba).  Three entry points per model: ``loss`` (train), ``prefill`` and
+``decode_step`` (serve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import batch_axes, constrain
+from . import layers as L
+from .config import ModelConfig, Segment
+from .moe import (PlacementPlan, moe_apply, round_robin_plan)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(rng, shape, scale_dim, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32)
+            * (scale_dim ** -0.5)).astype(dtype)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, n_ep_shards: int = 1,
+                 plan: PlacementPlan | None = None):
+        self.cfg = cfg
+        self.plan = plan
+        if cfg.n_experts and plan is None:
+            self.plan = round_robin_plan(cfg.n_experts, n_ep_shards)
+
+    # ------------------------------------------------------------- params
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        D, V = cfg.d_model, cfg.vocab
+        keys = jax.random.split(rng, 8 + len(cfg.segments))
+        params: dict = {"embed": _init(keys[0], (V, D), D, dt),
+                        "final_ln": jnp.ones((D,), jnp.float32)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _init(keys[1], (D, V), D, dt)
+        params["segments"] = [self._init_segment(keys[2 + i], seg)
+                              for i, seg in enumerate(cfg.segments)]
+        if cfg.mtp_depth:
+            k = jax.random.split(keys[-1], cfg.mtp_depth)
+            params["mtp"] = [self._init_mtp(k[i]) for i in range(cfg.mtp_depth)]
+        return params
+
+    def _init_attn(self, rng, seg_kind_attn: str, n: int) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        ks = jax.random.split(rng, 8)
+        if seg_kind_attn == "mla":
+            qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+            nope, rp, vh = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                            cfg.v_head_dim)
+            return {
+                "wq_a": _init(ks[0], (n, D, qr), D, dt),
+                "q_ln": jnp.ones((n, qr), jnp.float32),
+                "wq_b": _init(ks[1], (n, qr, H * (nope + rp)), qr, dt),
+                "wkv_a": _init(ks[2], (n, D, kvr + rp), D, dt),
+                "kv_ln": jnp.ones((n, kvr), jnp.float32),
+                "wkv_b": _init(ks[3], (n, kvr, H * (nope + vh)), kvr, dt),
+                "mla_wo": _init(ks[4], (n, H * vh, D), H * vh, dt),
+            }
+        Hp = cfg.n_heads_padded or H
+        return {
+            "wq": _init(ks[0], (n, D, Hp * hd), D, dt),
+            "wk": _init(ks[1], (n, D, KV * hd), D, dt),
+            "wv": _init(ks[2], (n, D, KV * hd), D, dt),
+            "wo": _init(ks[3], (n, Hp * hd, D), Hp * hd, dt),
+        }
+
+    def _init_mlp(self, rng, n: int, d_ff: int) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        D = cfg.d_model
+        ks = jax.random.split(rng, 3)
+        return {
+            "w_gate": _init(ks[0], (n, D, d_ff), D, dt),
+            "w_up": _init(ks[1], (n, D, d_ff), D, dt),
+            "w_down": _init(ks[2], (n, d_ff, D), d_ff, dt),
+        }
+
+    def _init_mamba(self, rng, n: int) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        D, di, N, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+        ks = jax.random.split(rng, 6)
+        A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, None],
+                     (n, di, 1))
+        return {
+            "in_proj": _init(ks[0], (n, D, 2 * di), D, dt),
+            "conv_w": _init(ks[1], (n, cfg.d_conv, di), cfg.d_conv, dt),
+            "conv_b": jnp.zeros((n, di), dt),
+            "A_log": jnp.log(A),
+            "ssm_D": jnp.ones((n, di), jnp.float32),
+            "x_proj": _init(ks[2], (n, di, r + 2 * N), di, dt),
+            "dt_proj": _init(ks[3], (n, r, di), r, dt),
+            "dt_bias": jnp.zeros((n, di), dt),
+            "out_proj": _init(ks[4], (n, di, D), di, dt),
+        }
+
+    def _init_moe(self, rng, n: int) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+        ks = jax.random.split(rng, 5)
+        out = {
+            "router": _init(ks[0], (n, D, E), D, jnp.float32),
+            "e_gate": _init(ks[1], (n, E, D, F), D, dt),
+            "e_up": _init(ks[2], (n, E, D, F), D, dt),
+            "e_down": _init(ks[3], (n, E, F, D), F, dt),
+        }
+        if cfg.n_shared_experts:
+            out.update(self._init_mlp(ks[4], n, cfg.n_shared_experts * F))
+        return out
+
+    def _init_segment(self, rng, seg: Segment) -> dict:
+        cfg = self.cfg
+        n = seg.n_layers
+        ks = jax.random.split(rng, 6)
+        D = cfg.d_model
+        if seg.kind == "mamba":
+            return {"ln1": jnp.ones((n, D), jnp.float32),
+                    "mamba": self._init_mamba(ks[0], n)}
+        p = {"ln1": jnp.ones((n, D), jnp.float32),
+             "ln2": jnp.ones((n, D), jnp.float32)}
+        if seg.kind == "vision_group":
+            dt = _dtype(cfg)
+            H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            sub = seg.sub_layers - 1
+            cross = {
+                "ln1": jnp.ones((n, D), jnp.float32),
+                "ln2": jnp.ones((n, D), jnp.float32),
+                "gate": jnp.zeros((n,), jnp.float32),
+                "cross_wq": _init(ks[0], (n, D, H * hd), D, dt),
+                "cross_wk": _init(ks[1], (n, D, KV * hd), D, dt),
+                "cross_wv": _init(ks[2], (n, D, KV * hd), D, dt),
+                "cross_wo": _init(ks[3], (n, H * hd, D), H * hd, dt),
+                "mlp": self._init_mlp(ks[4], n, cfg.d_ff),
+            }
+            selfp = {
+                "ln1": jnp.ones((n, sub, D), jnp.float32),
+                "ln2": jnp.ones((n, sub, D), jnp.float32),
+            }
+            # stacked (n, sub, ...) self-attn + mlp params
+            ks2 = jax.random.split(ks[5], 2)
+            a = self._init_attn(ks2[0], "gqa", n * sub)
+            m = self._init_mlp(ks2[1], n * sub, cfg.d_ff)
+            selfp["attn"] = jax.tree.map(
+                lambda w: w.reshape((n, sub) + w.shape[1:]), a)
+            selfp["mlp"] = jax.tree.map(
+                lambda w: w.reshape((n, sub) + w.shape[1:]), m)
+            return {"cross": cross, "self": selfp}
+        if seg.kind in ("dense", "moe", "hybrid"):
+            p["attn"] = self._init_attn(ks[0], seg.attn, n)
+        if seg.kind == "hybrid":
+            p["mamba"] = self._init_mamba(ks[1], n)
+        if seg.kind == "moe":
+            p["moe"] = self._init_moe(ks[2], n)
+        elif seg.kind in ("dense", "hybrid"):
+            p["mlp"] = self._init_mlp(ks[3], n, cfg.d_ff)
+        return p
+
+    def _init_mtp(self, rng) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        D = cfg.d_model
+        ks = jax.random.split(rng, 3)
+        return {
+            "proj": _init(ks[0], (2 * D, D), 2 * D, dt),
+            "ln": jnp.ones((D,), jnp.float32),
+            "block": self._init_segment(
+                ks[1], Segment("dense", 1, attn=cfg.segments[-1].attn)),
+        }
+
+    # ------------------------------------------------------------ forward
+    def _mixer(self, lp: dict, x, seg: Segment, img=None):
+        """Attention and/or SSM part of one layer (full sequence)."""
+        cfg = self.cfg
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        parts = []
+        if seg.attn == "mla":
+            parts.append(L.mla_attention(lp["attn"], h, cfg, seg))
+        elif seg.attn == "gqa":
+            parts.append(L.gqa_attention(lp["attn"], h, cfg, seg))
+        if seg.kind in ("mamba", "hybrid"):
+            key = "mamba"
+            y, _ = L.mamba_mixer(lp[key], h, cfg)
+            parts.append(y)
+        out = parts[0]
+        for extra in parts[1:]:
+            out = out + extra
+        return out
+
+    def _ffn(self, lp: dict, x, seg: Segment, mode: str):
+        cfg = self.cfg
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if seg.kind == "moe":
+            y, aux = moe_apply(lp["moe"], h, cfg, self.plan, mode)
+            return y, aux
+        return L.swiglu(lp["mlp"], h), jnp.zeros((), jnp.float32)
+
+    def _block(self, lp: dict, x, seg: Segment, mode: str, img=None):
+        if seg.kind == "mamba":
+            h = L.rmsnorm(x, lp["ln1"], self.cfg.norm_eps)
+            y, _ = L.mamba_mixer(lp["mamba"], h, self.cfg)
+            return x + y, jnp.zeros((), jnp.float32)
+        if seg.kind == "vision_group":
+            return self._vision_group(lp, x, seg, mode, img)
+        x = x + self._mixer(lp, x, seg)
+        x = self._constrain_residual(x)
+        y, aux = self._ffn(lp, x, seg, mode)
+        x = x + y
+        x = self._constrain_residual(x)
+        return x, aux
+
+    def _constrain_residual(self, x):
+        """Residual-stream sharding: batch over dp; with sequence
+        parallelism also seq over 'model' (activation memory /tp)."""
+        from ..parallel.sharding import active_mesh
+        mesh = active_mesh()
+        seq_axis = None
+        if (self.cfg.seq_shard_activations and mesh is not None
+                and "model" in mesh.axis_names and x.ndim == 3
+                and x.shape[1] % mesh.shape["model"] == 0
+                and x.shape[1] >= mesh.shape["model"]):
+            seq_axis = "model"
+        return constrain(x, batch_axes() or None, seq_axis, None)
+
+    def _vision_group(self, lp, x, seg: Segment, mode: str, img):
+        cfg = self.cfg
+        cp = lp["cross"]
+        h = L.rmsnorm(x, cp["ln1"], cfg.norm_eps)
+        x = x + L.cross_attention(cp, h, img, cfg)
+        x = x + L.swiglu(cp["mlp"], L.rmsnorm(x, cp["ln2"], cfg.norm_eps))
+
+        def sub_block(carry, sp):
+            xx = carry
+            hh = L.rmsnorm(xx, sp["ln1"], cfg.norm_eps)
+            xx = xx + L.gqa_attention(sp["attn"], hh, cfg, seg)
+            xx = xx + L.swiglu(sp["mlp"],
+                               L.rmsnorm(xx, sp["ln2"], cfg.norm_eps))
+            return xx, None
+
+        sub_params = {"ln1": lp["self"]["ln1"], "ln2": lp["self"]["ln2"],
+                      "attn": lp["self"]["attn"], "mlp": lp["self"]["mlp"]}
+        x, _ = jax.lax.scan(sub_block, x, sub_params)
+        return x, jnp.zeros((), jnp.float32)
+
+    def _run_segments(self, params, x, mode: str, img=None):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        for seg, sp in zip(cfg.segments, params["segments"]):
+            def body(carry, lp, seg=seg):
+                xx, aux = carry
+                xx, a = self._block(lp, xx, seg, mode, img=img)
+                return (xx, aux + a), None
+            if cfg.remat != "none":
+                policy = (jax.checkpoint_policies.nothing_saveable
+                          if cfg.remat == "full"
+                          else jax.checkpoint_policies.checkpoint_dots)
+                body = jax.checkpoint(body, policy=policy,
+                                      prevent_cse=False, static_argnums=())
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), sp)
+        return x, aux_total
+
+    def _embed_inputs(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.frame_input:
+            return batch["frames"].astype(_dtype(cfg))
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        return x
+
+    def logits_fn(self, params, x):
+        cfg = self.cfg
+        x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        return jnp.einsum("bsd,dv->bsv", x, head,
+                          preferred_element_type=jnp.float32)
+
+    def forward(self, params, batch, mode: str = "a2a"):
+        x = self._embed_inputs(params, batch)
+        x = constrain(x, batch_axes() or None, None, None)
+        img = batch.get("image_embeds")
+        if img is not None:
+            img = img.astype(_dtype(self.cfg))
+        x, aux = self._run_segments(params, x, mode, img=img)
+        return x, aux
+
+    # ---------------------------------------------------------- profiling
+    def route_trace(self, params, batch):
+        """Replay the forward pass collecting per-MoE-layer router choices:
+        returns a list (one per moe segment) of (L, T, top_k) expert ids.
+        Feeds the replication-aware placement planner (paper §B.1)."""
+        from .moe import router_topk
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        traces = []
+        for seg, sp in zip(cfg.segments, params["segments"]):
+            if seg.kind != "moe":
+                def body(carry, lp, seg=seg):
+                    xx, _ = self._block(lp, carry, seg, "dense")
+                    return xx, None
+                x, _ = jax.lax.scan(body, x, sp)
+                continue
+
+            def body(carry, lp, seg=seg):
+                xx = carry
+                h = L.rmsnorm(xx, lp["ln2"], cfg.norm_eps)
+                # router sees the post-mixer hidden state
+                xx2, _ = self._block(lp, xx, seg, "dense")
+                hh = L.rmsnorm(xx + self._mixer(lp, xx, seg), lp["ln2"],
+                               cfg.norm_eps)
+                _, idx, _ = router_topk(lp["moe"]["router"],
+                                        hh.reshape(-1, cfg.d_model), cfg)
+                return xx2, idx
+            x, idx = jax.lax.scan(body, x, sp)
+            traces.append(idx)
+        return traces
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, aux = self.forward(params, batch, mode="a2a")
+        logits = self.logits_fn(params, x)
+        labels = batch["labels"]
+        if cfg.frame_input or not self._is_causal():
+            tgt, lg = labels, logits          # frame classification
+        else:
+            tgt, lg = labels[:, 1:], logits[:, :-1]
+        ce = _xent(lg, tgt)
+        total = ce + cfg.router_aux_coef * aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp_depth:
+            mtp_ce = self._mtp_loss(params, x, batch)
+            total = total + cfg.mtp_loss_weight * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = total
+        return total, metrics
+
+    def _is_causal(self) -> bool:
+        return all(s.causal for s in self.cfg.segments)
+
+    def _mtp_loss(self, params, x, batch):
+        """DeepSeek-V3 multi-token prediction: one extra depth predicting
+        token t+2 from (h_t, emb(token_{t+1}))."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        total = jnp.zeros((), jnp.float32)
+        h = x
+        for d, mp in enumerate(params["mtp"]):
+            nxt = jnp.take(params["embed"], tokens[:, d + 1:], axis=0)
+            hcat = jnp.concatenate(
+                [L.rmsnorm(h[:, :nxt.shape[1]], mp["ln"], cfg.norm_eps), nxt],
+                axis=-1)
+            hm = jnp.einsum("bsd,dn->bsn", hcat, mp["proj"])
+            seg = Segment("dense", 1, attn=cfg.segments[-1].attn)
+            lp = jax.tree.map(lambda w: w[0], mp["block"])
+            hm, _ = self._block(lp, hm, seg, mode="a2a")
+            lg = self.logits_fn(params, hm)
+            tgt = labels[:, d + 1:]
+            total = total + _xent(lg[:, :-1], tgt[:, 1:])
+            h = hm
+        return total / cfg.mtp_depth
+
+    # -------------------------------------------------------------- serve
+    def init_cache(self, B: int, max_len: int) -> list:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        caches = []
+        for seg in cfg.segments:
+            n = seg.n_layers
+            def stack(tree):
+                return jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree)
+            c: dict = {}
+            if seg.attn == "gqa" and seg.kind not in ("mamba", "vision_group"):
+                c.update(stack(L.gqa_init_cache(cfg, seg, B, max_len, dt)))
+            elif seg.attn == "mla":
+                c.update(stack(L.mla_init_cache(cfg, B, max_len, dt)))
+            if seg.kind in ("mamba", "hybrid"):
+                c["mamba"] = stack(L.mamba_init_cache(cfg, B, dt))
+            if seg.kind == "vision_group":
+                sub = seg.sub_layers - 1
+                kv = L.gqa_init_cache(cfg, seg, B, max_len, dt)
+                c["self"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None, None],
+                                               (n, sub) + a.shape), kv)
+                N = cfg.n_image_tokens
+                c["cross"] = {
+                    "ck": jnp.zeros((n, B, N, cfg.n_kv_heads, cfg.hd), dt),
+                    "cv": jnp.zeros((n, B, N, cfg.n_kv_heads, cfg.hd), dt),
+                }
+            caches.append(c)
+        return caches
+
+    def prefill(self, params, batch, max_len: int):
+        """Run the full prompt, return (last-token logits, caches)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        img = batch.get("image_embeds")
+        if img is not None:
+            img = img.astype(_dtype(cfg))
+        caches = []
+        for seg, sp in zip(cfg.segments, params["segments"]):
+            def body(xx, lp, seg=seg):
+                y, aux = self._block(lp, xx, seg, mode="a2a", img=img)
+                cache = self._prefill_layer_cache(lp, xx, seg, max_len, img)
+                return y, cache
+            x, cache = jax.lax.scan(body, x, sp)
+            caches.append(cache)
+        logits = self.logits_fn(params, x[:, -1:])
+        return logits, caches
+
+    def _prefill_layer_cache(self, lp, x_in, seg: Segment, max_len, img):
+        cfg = self.cfg
+        c: dict = {}
+        if seg.kind == "vision_group":
+            h = L.rmsnorm(x_in, lp["cross"]["ln1"], cfg.norm_eps)
+            B, N = img.shape[0], img.shape[1]
+            ck = jnp.einsum("bnd,dm->bnm", img, lp["cross"]["cross_wk"])
+            cv = jnp.einsum("bnd,dm->bnm", img, lp["cross"]["cross_wv"])
+            c["cross"] = {
+                "ck": ck.reshape(B, N, cfg.n_kv_heads, cfg.hd),
+                "cv": cv.reshape(B, N, cfg.n_kv_heads, cfg.hd)}
+            # NOTE: self-attn caches inside the group are rebuilt by
+            # replaying sub-blocks; handled in prefill for simplicity by
+            # full recompute (vision decode is exercised via decode_32k).
+            h = x_in
+            sub_caches = []
+            xx = x_in
+            cp = lp["cross"]
+            hh = L.rmsnorm(xx, cp["ln1"], cfg.norm_eps)
+            xx = xx + L.cross_attention(cp, hh, img, cfg)
+            xx = xx + L.swiglu(cp["mlp"], L.rmsnorm(xx, cp["ln2"], cfg.norm_eps))
+            for j in range(seg.sub_layers - 1):
+                sp = jax.tree.map(lambda w: w[j], {
+                    "ln1": lp["self"]["ln1"], "ln2": lp["self"]["ln2"],
+                    "attn": lp["self"]["attn"], "mlp": lp["self"]["mlp"]})
+                h2 = L.rmsnorm(xx, sp["ln1"], cfg.norm_eps)
+                sub_caches.append(L.gqa_prefill_cache(sp["attn"], h2, cfg,
+                                                      seg, max_len))
+                xx = xx + L.gqa_attention(sp["attn"], h2, cfg, seg)
+                xx = xx + L.swiglu(sp["mlp"],
+                                   L.rmsnorm(xx, sp["ln2"], cfg.norm_eps))
+            c["self"] = jax.tree.map(lambda *a: jnp.stack(a), *sub_caches)
+            return c
+        h = L.rmsnorm(x_in, lp["ln1"], cfg.norm_eps)
+        if seg.attn == "gqa" and seg.kind != "mamba":
+            c.update(L.gqa_prefill_cache(lp["attn"], h, cfg, seg, max_len))
+        elif seg.attn == "mla":
+            c.update(L.mla_prefill_cache(lp["attn"], h, cfg, max_len))
+        if seg.kind in ("mamba", "hybrid"):
+            _, st = L.mamba_mixer(lp["mamba"] if seg.kind == "hybrid"
+                                  else lp["mamba"], h, cfg)
+            c["mamba"] = st
+        return c
+
+    def decode_step(self, params, token_or_frame, caches, pos):
+        """One token for the whole batch.  pos: scalar int32."""
+        cfg = self.cfg
+        if cfg.frame_input:
+            x = token_or_frame.astype(_dtype(cfg))
+        else:
+            x = jnp.take(params["embed"], token_or_frame, axis=0)
+        new_caches = []
+        for seg, sp, cache in zip(cfg.segments, params["segments"], caches):
+            def body(xx, lp_cache, seg=seg):
+                lp, c = lp_cache
+                y, nc = self._decode_block(lp, xx, seg, c, pos)
+                return y, nc
+            x, nc = jax.lax.scan(body, x, (sp, cache))
+            new_caches.append(nc)
+        logits = self.logits_fn(params, x)
+        return logits, new_caches
+
+    def _decode_block(self, lp, x, seg: Segment, cache, pos):
+        cfg = self.cfg
+        if seg.kind == "mamba":
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, st = L.mamba_mixer(lp["mamba"], h, cfg, state=cache["mamba"])
+            return x + y, {"mamba": st}
+        if seg.kind == "vision_group":
+            return self._decode_vision_group(lp, x, seg, cache, pos)
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        new_cache = dict(cache)
+        parts = []
+        if seg.attn == "mla":
+            y, nc = L.mla_attention_decode(lp["attn"], h, cfg, cache, pos,
+                                           absorb=cfg.mla_absorb)
+            new_cache.update(nc)
+            parts.append(y)
+        elif seg.attn == "gqa":
+            y, nc = L.gqa_attention_decode(lp["attn"], h, cfg, seg,
+                                           cache, pos)
+            new_cache.update(nc)
+            parts.append(y)
+        if seg.kind in ("mamba", "hybrid"):
+            y, st = L.mamba_mixer(lp["mamba"], h, cfg, state=cache["mamba"])
+            new_cache["mamba"] = st
+            parts.append(y)
+        out = parts[0]
+        for extra in parts[1:]:
+            out = out + extra
+        x = x + out
+        hf = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if seg.kind == "moe":
+            y, _ = moe_apply(lp["moe"], hf, cfg, self.plan, mode="tp")
+        else:
+            y = L.swiglu(lp["mlp"], hf)
+        return x + y, new_cache
+
+    def _decode_vision_group(self, lp, x, seg: Segment, cache, pos):
+        cfg = self.cfg
+        cp = lp["cross"]
+        B = x.shape[0]
+        h = L.rmsnorm(x, cp["ln1"], cfg.norm_eps)
+        hd = cfg.hd
+        q = jnp.einsum("bsd,dn->bsn", h, cp["cross_wq"]).reshape(
+            B, 1, cfg.n_heads, hd)
+        from ..kernels import ops
+        out = ops.attention(q, cache["cross"]["ck"], cache["cross"]["cv"],
+                            causal=False)
+        out = out.reshape(B, 1, cfg.n_heads * hd)
+        x = x + jnp.tanh(cp["gate"]).astype(x.dtype) * jnp.einsum(
+            "bsn,nd->bsd", out, cp["cross_wo"])
+        x = x + L.swiglu(cp["mlp"], L.rmsnorm(x, cp["ln2"], cfg.norm_eps))
+        new_cache = {"cross": cache["cross"]}
+
+        def sub(carry, lp_cache, seg=seg):
+            xx = carry
+            sp, c = lp_cache
+            hh = L.rmsnorm(xx, sp["ln1"], cfg.norm_eps)
+            y, nc = L.gqa_attention_decode(sp["attn"], hh, cfg, seg, c, pos)
+            xx = xx + y
+            xx = xx + L.swiglu(sp["mlp"],
+                               L.rmsnorm(xx, sp["ln2"], cfg.norm_eps))
+            return xx, nc
+
+        sub_params = {"ln1": lp["self"]["ln1"], "ln2": lp["self"]["ln2"],
+                      "attn": lp["self"]["attn"], "mlp": lp["self"]["mlp"]}
+        x, nc = jax.lax.scan(sub, x, (sub_params, cache["self"]))
+        new_cache["self"] = nc
+        return x, new_cache
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

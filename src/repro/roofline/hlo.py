@@ -1,0 +1,83 @@
+"""HLO text parsing for the roofline analysis.
+
+``cost_analysis()`` provides FLOPs and bytes accessed but not collective
+traffic; we parse the compiled HLO text and sum the result-buffer sizes of
+every collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), per op kind.  Sizes are per-participant buffer bytes,
+i.e. what one chip's ICI links carry for that op (the roofline's
+collective_bytes / (chips x link_bw) uses exactly this quantity).
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[16,1024]{1,0} all-reduce(...)
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+([a-z\-]+)")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes_from_text(hlo: str) -> dict:
+    per_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # find the op name after '='
+        m = re.search(r"=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(",
+                        rhs)
+        if not opm:
+            continue
+        kind = opm.group(1)
+        if "-done(" in rhs:
+            continue  # avoid double counting async pairs (count the start)
+        # result type(s): possibly a tuple
+        head = rhs.split(kind)[0]
+        total = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _TUPLE_RE.findall(head))
+        per_kind[kind] += total
+        counts[kind] += 1
+    return {
+        "per_kind_bytes": per_kind,
+        "counts": counts,
+        "total_bytes": int(sum(per_kind.values())),
+    }
+
+
+def summarize_cost(cost) -> dict:
+    """cost_analysis() returns a dict (or list of dicts) of named scalars."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out = {}
+    for key in ("flops", "bytes accessed", "transcendentals",
+                "optimal_seconds"):
+        if key in cost:
+            out[key.replace(" ", "_")] = float(cost[key])
+    # per-memory-space bytes where present
+    for k, v in cost.items():
+        if k.startswith("bytes accessed") and k != "bytes accessed":
+            out[k.replace(" ", "_").replace("'", "")] = float(v)
+    return out

@@ -1,0 +1,191 @@
+"""Builders for train / prefill / decode steps with explicit shardings.
+
+``build_train_step``  -- loss + grads + AdamW update (donated state).
+``build_serve_steps`` -- prefill and single-token decode.
+
+Sharding policy (DESIGN.md §6):
+  * params / optimizer state: path-based rules (`repro.parallel.sharding`),
+  * batch dims over ('pod','data'); dp_seq strategy additionally shards the
+    sequence dim over 'model' (sequence parallelism for small models),
+  * KV caches: batch over data; sequence over 'model' when the batch does
+    not cover the data axis (long-context decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.model import Model
+from ..optim import adamw
+from ..parallel import sharding as shd
+
+
+def _nd(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, abstract_batch: dict) -> dict:
+    """Shardings for the input batch dict."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    seq_axis = "model" if cfg.strategy == "dp_seq" else None
+    out = {}
+    for k, v in abstract_batch.items():
+        if k in ("tokens", "labels", "frames"):
+            spec = [dp or None, seq_axis] + [None] * (len(v.shape) - 2)
+            if v.shape[1] == 1 or (seq_axis and v.shape[1] % mesh.shape["model"]):
+                spec[1] = None
+            out[k] = _nd(mesh, *spec)
+        else:  # image_embeds etc: batch-sharded only
+            out[k] = _nd(mesh, dp or None, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, abstract_caches) -> object:
+    """KV/latent/SSM cache shardings: batch over data when divisible, and
+    the long sequence dim over 'model' when that still divides."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    model_size = mesh.shape.get("model", 1)
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # batch: first non-leading dim divisible by the dp extent (caches
+        # are (layers[, sub], batch, ...))
+        batch_dim = None
+        for i in range(1, len(shape)):
+            if shape[i] % dp_size == 0 and shape[i] >= dp_size:
+                spec[i] = dp
+                batch_dim = i
+                break
+        # cache sequence: largest remaining long dim over 'model'
+        order = sorted((i for i in range(1, len(shape)) if i != batch_dim),
+                       key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] >= model_size and shape[i] % model_size == 0 \
+                    and shape[i] >= 1024:
+                spec[i] = "model"
+                break
+        return _nd(mesh, *spec)
+
+    return jax.tree.map(spec_for, abstract_caches)
+
+
+@dataclasses.dataclass
+class TrainStep:
+    step_fn: object          # jit'd (state, batch) -> (state, metrics)
+    state_shardings: object
+    batch_shardings: object
+    abstract_state: object
+
+
+def make_train_state_abstract(model: Model, opt_cfg: adamw.AdamWConfig):
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(partial(adamw.init_state, opt_cfg), params)
+    return {"params": params, "opt": opt}
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, abstract_state):
+    pspecs = shd.tree_param_specs(abstract_state["params"], cfg.strategy)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def opt_leaf(path_spec, leaf):
+        spec = list(path_spec) + [None] * (len(leaf.shape) - len(path_spec))
+        if "data" in spec:  # already data-sharded (e.g. ep_data experts)
+            return NamedSharding(mesh, P(*spec))
+        if cfg.zero_opt_state and "data" in mesh.axis_names:
+            # ZeRO: add the data axis on the largest unsharded dim
+            dims = sorted(range(len(leaf.shape)),
+                          key=lambda i: -leaf.shape[i])
+            for i in dims:
+                if spec[i] is None and leaf.shape[i] % mesh.shape["data"] == 0 \
+                        and leaf.shape[i] >= mesh.shape["data"]:
+                    spec[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    def opt_tree(tree):
+        return jax.tree.map(lambda s, l: opt_leaf(tuple(s), l), pspecs, tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    opt_sh = {
+        "step": NamedSharding(mesh, P()),
+        "master": opt_tree(abstract_state["opt"]["master"]),
+        "m": opt_tree(abstract_state["opt"]["m"]),
+        "v": opt_tree(abstract_state["opt"]["v"]),
+    }
+    return {"params": param_sh, "opt": opt_sh}
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     opt_cfg: adamw.AdamWConfig | None = None,
+                     plan=None) -> TrainStep:
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    n_ep = mesh.shape.get("model", 1)
+    model = Model(cfg, n_ep_shards=n_ep, plan=plan)
+
+    def step(state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            opt_cfg, state["opt"], grads, state["params"])
+        metrics = dict(metrics, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    abstract_state = make_train_state_abstract(model, opt_cfg)
+    st_sh = state_shardings(cfg, mesh, abstract_state)
+    fn = jax.jit(step, donate_argnums=(0,),
+                 in_shardings=(st_sh, None),
+                 out_shardings=(st_sh, None))
+    return TrainStep(step_fn=fn, state_shardings=st_sh,
+                     batch_shardings=None, abstract_state=abstract_state)
+
+
+@dataclasses.dataclass
+class ServeSteps:
+    prefill_fn: object
+    decode_fn: object
+    param_shardings: object
+    abstract_params: object
+    abstract_caches: object
+    cache_shardings: object
+
+
+def build_serve_steps(cfg: ModelConfig, mesh: Mesh, B: int, max_len: int,
+                      plan=None) -> ServeSteps:
+    n_ep = mesh.shape.get("model", 1)
+    model = Model(cfg, n_ep_shards=n_ep, plan=plan)
+    abstract_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = shd.tree_param_specs(abstract_params, cfg.strategy)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    abstract_caches = jax.eval_shape(partial(model.init_cache, B, max_len))
+    cache_sh = cache_specs(cfg, mesh, abstract_caches)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    def decode(params, tok, caches, pos):
+        return model.decode_step(params, tok, caches, pos)
+
+    prefill_fn = jax.jit(prefill,
+                         in_shardings=(param_sh, None),
+                         out_shardings=(None, cache_sh))
+    decode_fn = jax.jit(decode,
+                        in_shardings=(param_sh, None, cache_sh, None),
+                        out_shardings=(None, cache_sh),
+                        donate_argnums=(2,))
+    return ServeSteps(prefill_fn=prefill_fn, decode_fn=decode_fn,
+                      param_shardings=param_sh,
+                      abstract_params=abstract_params,
+                      abstract_caches=abstract_caches,
+                      cache_shardings=cache_sh)

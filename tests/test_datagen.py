@@ -1,0 +1,51 @@
+"""Dataset generators must mirror the paper's construction (§B)."""
+import numpy as np
+
+from repro.datagen import (hdb_dataset, moe_dataset, psdd_dataset,
+                           spmv_dataset, sptrsv_dataset, synthetic_trace,
+                           tiny_dataset, trace_to_moe2, trace_to_moe8)
+
+
+def test_moe8_statistics():
+    trace = synthetic_trace(n_experts=128, n_tokens=20_000, seed=0)
+    hg = trace_to_moe8(trace, kappa0=1000)
+    assert hg.num_pins >= 1000            # pin-limit rule of §B.1
+    assert hg.num_pins <= 1000 + 8        # "or only slightly above"
+    assert 60 <= hg.n <= 128              # covers a large share of experts
+    assert np.all(hg.mu >= 1.0) and np.all(hg.mu <= 10.0)  # weights in [1,10]
+    assert all(len(e) == 8 for e in hg.edges)
+
+
+def test_moe2_is_simple_graph():
+    trace = synthetic_trace(n_experts=128, n_tokens=20_000, seed=1)
+    hg = trace_to_moe2(trace, kappa0=1000)
+    assert all(len(e) == 2 for e in hg.edges)
+    assert hg.num_pins >= 1000
+    # no isolated nodes after cleanup
+    seen = {v for e in hg.edges for v in e}
+    assert seen == set(range(hg.n))
+
+
+def test_spmv_models():
+    fg = spmv_dataset("fg", count=2)
+    rn = spmv_dataset("rn", count=2)
+    for hg in fg:
+        assert all(len(e) >= 2 for e in hg.edges)
+        assert np.all(hg.omega == 1.0)        # fine-grained: unit node weight
+    for hg in rn:
+        assert np.all(hg.omega >= 1.0)        # row-net: weight = column nnz
+
+
+def test_dags_are_acyclic_and_sized():
+    for d in hdb_dataset() + sptrsv_dataset() + psdd_dataset():
+        order = d.topo_order()            # raises on cycles
+        assert len(order) == d.n
+        assert d.num_edges > 0
+    for d in tiny_dataset():
+        assert 20 <= d.n <= 90            # §C.2.2 tiny range (scaled)
+
+
+def test_trace_determinism():
+    a = synthetic_trace(n_tokens=1000, seed=42)
+    b = synthetic_trace(n_tokens=1000, seed=42)
+    assert np.array_equal(a, b)

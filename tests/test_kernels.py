@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(deliverable c).  The kernels target TPU; interpret=True executes the kernel
+body on CPU with identical semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.moe_gmm import grouped_matmul
+from repro.kernels import ref
+
+
+def rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+SHAPES_ATTN = [
+    # (B, Sq, Sk, H, KV, hd, bq, bk)
+    (1, 8, 8, 1, 1, 4, 8, 8),
+    (2, 16, 16, 4, 2, 8, 8, 8),
+    (1, 32, 32, 4, 4, 16, 16, 8),
+    (2, 24, 24, 6, 2, 8, 8, 12),     # GQA group 3
+    (1, 64, 64, 2, 1, 32, 32, 32),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", SHAPES_ATTN)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(shape, dtype, causal):
+    B, Sq, Sk, H, KV, hd, bq, bk = shape
+    rng = np.random.default_rng(hash((shape, causal)) % 2**31)
+    q = rand(rng, (B, Sq, H, hd), dtype)
+    k = rand(rng, (B, Sk, KV, hd), dtype)
+    v = rand(rng, (B, Sk, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.attention_reference(q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_mixed_vdim():
+    """MLA-style: v head dim differs from q/k head dim."""
+    rng = np.random.default_rng(0)
+    q = rand(rng, (1, 16, 2, 12), jnp.float32)
+    k = rand(rng, (1, 16, 2, 12), jnp.float32)
+    v = rand(rng, (1, 16, 2, 8), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8,
+                          interpret=True)
+    want = ref.attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+SHAPES_SCAN = [
+    # (B, S, di, N, chunk)
+    (1, 8, 4, 2, 4),
+    (2, 16, 8, 4, 8),
+    (1, 32, 16, 4, 8),
+    (2, 64, 8, 16, 16),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", SHAPES_SCAN)
+def test_mamba_scan_matches_ref(shape, dtype):
+    B, S, di, N, chunk = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    u = rand(rng, (B, S, di), dtype)
+    dt = jnp.abs(rand(rng, (B, S, di), dtype)) * 0.1
+    A = -jnp.abs(rand(rng, (di, N), jnp.float32)) - 0.1
+    Bc = rand(rng, (B, S, N), dtype)
+    Cc = rand(rng, (B, S, N), dtype)
+    D = rand(rng, (di,), jnp.float32)
+    y, last = mamba_scan(u, dt, A, Bc, Cc, D, chunk=chunk, interpret=True)
+    y_ref, last_ref = ref.mamba_scan_reference(u, dt, A, Bc, Cc, D)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(last_ref),
+                               rtol=tol, atol=tol)
+
+
+SHAPES_GMM = [
+    # (G, capacity, D, F, br, bc, bk)
+    (2, 8, 16, 16, 8, 8, 16),
+    (4, 16, 32, 24, 8, 8, 16),
+    (3, 8, 8, 8, 4, 8, 8),
+    (8, 32, 16, 48, 16, 16, 16),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", SHAPES_GMM)
+def test_grouped_matmul_matches_ref(shape, dtype):
+    G, C, D, F, br, bc, bk = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = rand(rng, (G * C, D), dtype)
+    w = rand(rng, (G, D, F), dtype)
+    out = grouped_matmul(x, w, C, block_rows=br, block_cols=bc, block_k=bk,
+                         interpret=True)
+    sizes = jnp.full((G,), C, jnp.int32)
+    want = ref.grouped_matmul_reference(x, w, sizes)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_property_flash_attention_random_shapes(b, g, causal):
+    """Property sweep: any (block-divisible) shape matches the oracle."""
+    rng = np.random.default_rng(b * 100 + g)
+    H, KV, hd = 2 * g, g, 8
+    S = 16
+    q = rand(rng, (b, S, H, hd), jnp.float32)
+    k = rand(rng, (b, S, KV, hd), jnp.float32)
+    v = rand(rng, (b, S, KV, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=8, block_k=8,
+                          interpret=True)
+    want = ref.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-6, atol=3e-6)
+
+
+def test_ragged_ref_grouped_matmul():
+    """The general (non-aligned) reference handles ragged group sizes."""
+    rng = np.random.default_rng(5)
+    sizes = jnp.asarray([3, 0, 5, 2], jnp.int32)
+    T = int(sizes.sum())
+    x = rand(rng, (T, 8), jnp.float32)
+    w = rand(rng, (4, 8, 6), jnp.float32)
+    out = ref.grouped_matmul_reference(x, w, sizes)
+    row = 0
+    for gi, sz in enumerate(np.asarray(sizes)):
+        for _ in range(int(sz)):
+            want = np.asarray(x[row]) @ np.asarray(w[gi])
+            np.testing.assert_allclose(np.asarray(out[row]), want, rtol=1e-5)
+            row += 1

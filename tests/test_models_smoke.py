@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and absence of NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduce_config
+from repro.models.model import Model
+
+ARCHS = ["hubert-xlarge", "yi-34b", "deepseek-coder-33b", "smollm-135m",
+         "deepseek-7b", "olmoe-1b-7b", "deepseek-v3-671b",
+         "llama-3.2-vision-11b", "falcon-mamba-7b", "hymba-1.5b"]
+
+B, S = 2, 32
+
+
+def make_batch(cfg, rng):
+    batch = {}
+    if cfg.frame_input:
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)),
+                                      jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                      jnp.int32)
+    batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if cfg.n_image_tokens:
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_image_tokens, cfg.d_model)), jnp.float32)
+    return batch
+
+
+def test_registry_complete():
+    assert set(ARCHS) <= set(list_archs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grad(arch):
+    cfg = reduce_config(get_config(arch))
+    model = Model(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, rng)
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert float(loss) > 0
+
+    grads = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))(params, batch)
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in flat), \
+        f"{arch}: non-finite grads"
+    # at least one nonzero gradient leaf
+    assert any(float(jnp.abs(g.astype(jnp.float32)).sum()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "olmoe-1b-7b",
+                                  "deepseek-v3-671b", "falcon-mamba-7b",
+                                  "hymba-1.5b", "llama-3.2-vision-11b"])
+def test_decode_matches_prefill(arch):
+    """Greedy decode over the same tokens must equal teacher-forced logits."""
+    cfg = reduce_config(get_config(arch))
+    model = Model(cfg)
+    rng = np.random.default_rng(1)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg, rng)
+    max_len = S + 4
+
+    # teacher-forced forward
+    x, _ = model.forward(params, batch, mode="dense")
+    full_logits = model.logits_fn(params, x)
+
+    # prefill on the first S-1 tokens, then decode token S-1
+    pre_batch = dict(batch)
+    if not cfg.frame_input:
+        pre_batch["tokens"] = batch["tokens"][:, :S - 1]
+    else:
+        pre_batch["frames"] = batch["frames"][:, :S - 1]
+    logits_last, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len))(params, pre_batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_last[:, 0]), np.asarray(full_logits[:, S - 2]),
+        rtol=2e-2, atol=2e-2)
+
+    tok = (batch["tokens"][:, S - 1:S] if not cfg.frame_input
+           else batch["frames"][:, S - 1:S])
+    step_logits, _ = jax.jit(
+        lambda p, t, c: model.decode_step(p, t, c, jnp.int32(S - 1))
+    )(params, tok, caches)
+    # bf16 accumulation (absorbed-MLA decode is exact in f32 but ~3e-2 in
+    # bf16); verified exact with absorb=False in layer-level tests
+    np.testing.assert_allclose(
+        np.asarray(step_logits[:, 0]), np.asarray(full_logits[:, S - 1]),
+        rtol=6e-2, atol=5e-2)
+
+
+def test_param_counts_match_published():
+    """Full configs must land near the published parameter counts."""
+    expect = {
+        "yi-34b": 34.4e9,
+        "deepseek-coder-33b": 33.3e9,
+        "smollm-135m": 0.135e9,
+        "deepseek-7b": 6.9e9,
+        "olmoe-1b-7b": 6.9e9,
+        "deepseek-v3-671b": 671e9,
+        "falcon-mamba-7b": 7.3e9,
+        "hymba-1.5b": 1.5e9,
+    }
+    for name, target in expect.items():
+        n = get_config(name).param_count()
+        assert abs(n - target) / target < 0.15, \
+            f"{name}: {n/1e9:.2f}B vs published {target/1e9:.2f}B"
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek-v3-671b")
+    active = cfg.active_param_count()
+    assert abs(active - 37e9) / 37e9 < 0.25, f"{active/1e9:.1f}B active"

@@ -1,0 +1,140 @@
+"""Tests for hypergraph partitioning with replication (paper §3.2, §5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hypergraph import Hypergraph
+from repro.core.partition import (exact_partition, is_valid, min_cover,
+                                  partition_cost, partition_heuristic,
+                                  partition_with_replication,
+                                  replicate_local_search)
+
+
+def two_clique(n, eps):
+    """Paper Appendix A.1: two cliques of size (1+eps)/2*n sharing eps*n nodes."""
+    k = int((1 + eps) / 2 * n)
+    inter = int(eps * n)
+    A = list(range(k))
+    B = list(range(k - inter, min(2 * k - inter, n)))
+    edges = []
+    for S in (A, B):
+        for i in range(len(S)):
+            for j in range(i + 1, len(S)):
+                edges.append((S[i], S[j]))
+    return Hypergraph(n=n, edges=edges)
+
+
+class TestMinCover:
+    def test_paper_example(self):
+        # e=(u,v,w): u in V1,V2; v in V2,V3; w in V3,V4 -> lambda=2 (V1+V3 etc.)
+        masks = [0b0011, 0b0110, 0b1100]
+        assert min_cover(masks, 4) == 2
+
+    def test_single(self):
+        assert min_cover([1, 1, 1], 4) == 1
+        assert min_cover([1, 2], 4) == 2
+        assert min_cover([1, 2, 4, 8], 4) == 4
+
+    def test_shared_processor(self):
+        assert min_cover([0b01, 0b11], 2) == 1
+
+    @given(st.lists(st.integers(min_value=1, max_value=15), min_size=1, max_size=6))
+    @settings(max_examples=200, deadline=None)
+    def test_cover_bounds(self, masks):
+        lam = min_cover(masks, 4)
+        assert 1 <= lam <= 4
+        # replication flexibility: adding a processor to any pin can't raise lambda
+        wider = [m | 1 for m in masks]
+        assert min_cover(wider, 4) <= lam
+
+
+class TestExact:
+    def test_two_clique_replication_zero(self):
+        hg = two_clique(16, 0.25)
+        base = exact_partition(hg, 2, 0.25, mode="none", time_limit=60)
+        rep = exact_partition(hg, 2, 0.25, mode="rep", time_limit=60)
+        assert base.optimal and rep.optimal
+        assert base.cost > 0
+        assert rep.cost == 0  # paper: replication removes all communication
+
+    def test_modes_ordering(self):
+        rng = np.random.default_rng(3)
+        hg = Hypergraph(n=12, edges=[tuple(rng.choice(12, size=3, replace=False))
+                                     for _ in range(16)])
+        b = exact_partition(hg, 2, 0.2, mode="none", time_limit=60)
+        d = exact_partition(hg, 2, 0.2, mode="dup", time_limit=60, ub_masks=b.masks)
+        r = exact_partition(hg, 2, 0.2, mode="rep", time_limit=60, ub_masks=d.masks)
+        assert r.cost <= d.cost + 1e-9 <= b.cost + 1e-9
+        for res, mode in ((b, "none"), (d, "dup"), (r, "rep")):
+            max_rep = {"none": 1, "dup": 2, "rep": None}[mode]
+            assert is_valid(hg, res.masks, 2, 0.2, max_replicas=max_rep)
+
+    def test_matches_bruteforce_p2(self):
+        from itertools import product
+        rng = np.random.default_rng(7)
+        hg = Hypergraph(n=7, edges=[tuple(rng.choice(7, size=rng.integers(2, 4),
+                                                     replace=False))
+                                    for _ in range(9)])
+        best = {"none": np.inf, "rep": np.inf}
+        for assign in product([1, 2, 3], repeat=7):
+            masks = np.array(assign)
+            if not is_valid(hg, masks, 2, 0.3):
+                continue
+            c = partition_cost(hg, masks, 2)
+            if all(m in (1, 2) for m in assign):
+                best["none"] = min(best["none"], c)
+            best["rep"] = min(best["rep"], c)
+        for mode in ("none", "rep"):
+            r = exact_partition(hg, 2, 0.3, mode=mode, time_limit=60)
+            assert r.optimal
+            assert abs(r.cost - best[mode]) < 1e-9
+
+    def test_weighted_balance(self):
+        hg = Hypergraph(n=6, edges=[(0, 1), (2, 3), (4, 5)],
+                        omega=np.array([5, 1, 1, 1, 1, 1.0]))
+        res = exact_partition(hg, 2, 0.1, mode="none", time_limit=30)
+        assert is_valid(hg, res.masks, 2, 0.1)
+
+
+class TestHeuristic:
+    def test_replication_never_hurts(self):
+        rng = np.random.default_rng(0)
+        hg = Hypergraph(n=80, edges=[tuple(rng.choice(80, size=rng.integers(2, 6),
+                                                      replace=False))
+                                     for _ in range(120)])
+        base = partition_heuristic(hg, 4, 0.05, seed=0)
+        rep = replicate_local_search(hg, base.masks.copy(), 4, 0.05, seed=0)
+        assert rep.cost <= base.cost + 1e-9
+        assert is_valid(hg, rep.masks, 4, 0.05)
+
+    def test_dup_mode_respects_cap(self):
+        rng = np.random.default_rng(1)
+        hg = Hypergraph(n=60, edges=[tuple(rng.choice(60, size=3, replace=False))
+                                     for _ in range(90)])
+        base = partition_heuristic(hg, 4, 0.1, seed=0)
+        rep = replicate_local_search(hg, base.masks.copy(), 4, 0.1,
+                                     max_replicas=2, seed=0)
+        assert is_valid(hg, rep.masks, 4, 0.1, max_replicas=2)
+
+    def test_end_to_end_small_uses_exact(self):
+        hg = two_clique(14, 0.25)
+        base, rep = partition_with_replication(hg, 2, 0.25, exact_node_limit=20,
+                                               time_limit=60)
+        assert rep.cost <= base.cost
+
+
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_property_rep_leq_none(data):
+    """Optimal cost with replication never exceeds optimum without."""
+    n = data.draw(st.integers(min_value=5, max_value=9))
+    n_edges = data.draw(st.integers(min_value=3, max_value=8))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    edges = [tuple(rng.choice(n, size=int(rng.integers(2, min(4, n))),
+                              replace=False)) for _ in range(n_edges)]
+    hg = Hypergraph(n=n, edges=edges)
+    base = exact_partition(hg, 2, 0.4, mode="none", time_limit=20)
+    rep = exact_partition(hg, 2, 0.4, mode="rep", time_limit=20,
+                          ub_masks=base.masks)
+    assert rep.cost <= base.cost + 1e-9
+    assert is_valid(hg, rep.masks, 2, 0.4)

@@ -1,0 +1,125 @@
+"""Correctness of the beyond-paper perf knobs (EXPERIMENTS.md SS-Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.models import layers as L
+from repro.models.config import Segment
+from repro.models.model import Model
+
+
+def test_head_padding_masks_pad_heads():
+    """Padded q-heads must not contribute: corrupting their wq/wo rows
+    leaves the output unchanged (arch-faithfulness of the cell-A knob)."""
+    cfg = reduce_config(get_config("yi-34b"))          # 4 heads, kv 2
+    cfg = cfg.with_(n_heads=3, n_kv_heads=1, n_heads_padded=4)
+    seg = Segment("dense", 1)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda w: w[0], params["segments"][0])["attn"]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)), jnp.float32)
+
+    out = L.gqa_attention(lp, x, cfg, seg)
+    # corrupt the pad head (head index 3 = last in its kv group of 4)
+    hd = cfg.hd
+    wq = np.asarray(lp["wq"], np.float32)
+    wq[:, 3 * hd:4 * hd] = 1e3
+    lp2 = dict(lp, wq=jnp.asarray(wq, lp["wq"].dtype))
+    out2 = L.gqa_attention(lp2, x, cfg, seg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_head_padding_decode_consistency():
+    cfg = reduce_config(get_config("yi-34b")).with_(
+        n_heads=3, n_kv_heads=1, n_heads_padded=4)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    B, S = 2, 16
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    x, _ = model.forward(params, batch, mode="dense")
+    full = model.logits_fn(params, x)
+    pre = {"tokens": batch["tokens"][:, :S - 1]}
+    _, caches = model.prefill(params, pre, S + 2)
+    step, _ = model.decode_step(params, batch["tokens"][:, S - 1:S], caches,
+                                jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(step[:, 0]),
+                               np.asarray(full[:, S - 1]),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_mla_absorb_equivalence():
+    """Absorbed-weight MLA decode == naive expansion (cell-hillclimb knob
+    for decode cells), exact in f32."""
+    cfg = reduce_config(get_config("deepseek-v3-671b")).with_(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    lp = jax.tree.map(lambda w: w[0], params["segments"][0])["attn"]
+    rng = np.random.default_rng(2)
+    B, S = 2, 8
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    cache = L.mla_prefill_cache(lp, x[:, :S - 1], cfg, S + 2)
+    outs = {}
+    for absorb in (True, False):
+        y, _ = L.mla_attention_decode(lp, x[:, S - 1:], cfg, cache,
+                                      jnp.int32(S - 1), absorb=absorb)
+        outs[absorb] = np.asarray(y)
+    np.testing.assert_allclose(outs[True], outs[False], rtol=1e-4, atol=1e-5)
+
+
+def test_analytic_cost_model_knob_directions():
+    """Napkin-math engine: each knob must move its term the right way."""
+    from repro.roofline.model import step_cost
+    cfg = get_config("yi-34b")
+    base = step_cost(cfg, 256, 4096, 4096, 16, 16, "train")
+    padded = step_cost(cfg.with_(n_heads_padded=64), 256, 4096, 4096,
+                       16, 16, "train")
+    assert padded["flops"] < base["flops"] * 0.5
+
+    v3 = get_config("deepseek-v3-671b")
+    b = step_cost(v3, 256, 4096, 4096, 32, 16, "train")
+    z = step_cost(v3.with_(zero_opt_state=True), 256, 4096, 4096,
+                  32, 16, "train")
+    assert z["coll_bytes"] < b["coll_bytes"]
+    assert z["hbm_bytes"] < b["hbm_bytes"]
+
+    moe = get_config("olmoe-1b-7b")
+    b = step_cost(moe, 256, 4096, 4096, 16, 16, "train")
+    pl = step_cost(moe.with_(expert_placement=(0.3, 1.25)), 256, 4096, 4096,
+                   16, 16, "train")
+    assert pl["coll_bytes"] < b["coll_bytes"]
+
+
+def test_cost_model_monotonicity_properties():
+    """Roofline cost model invariants used by the hillclimb napkin math."""
+    import dataclasses
+    from repro.roofline.model import step_cost
+    cfg = get_config("deepseek-7b")
+    # more layers -> proportionally more flops
+    seg = cfg.segments[0]
+    c30 = step_cost(cfg, 64, 1024, 1024, 8, 8, "prefill")
+    c60 = step_cost(cfg.with_(segments=(
+        dataclasses.replace(seg, n_layers=60),)), 64, 1024, 1024, 8, 8,
+        "prefill")
+    assert c60["flops"] > 1.8 * c30["flops"]
+    # train >= 3x prefill flops (fwd+bwd+remat)
+    t = step_cost(cfg, 64, 1024, 1024, 8, 8, "train")
+    p = step_cost(cfg, 64, 1024, 1024, 8, 8, "prefill")
+    assert t["flops"] >= 3 * p["flops"]
+    # decode flops << prefill flops at same context
+    d = step_cost(cfg, 64, 1, 1024, 8, 8, "decode")
+    assert d["flops"] < p["flops"] / 100
+    # more dp -> fewer per-device flops
+    half = step_cost(cfg, 64, 1024, 1024, 16, 8, "prefill")
+    assert half["flops"] < p["flops"]
+    # sliding window cheaper than full attention at long K
+    hy = get_config("hymba-1.5b")
+    full = step_cost(hy.with_(segments=tuple(
+        dataclasses.replace(s, sliding_window=0) for s in hy.segments)),
+        8, 32768, 32768, 8, 8, "prefill")
+    swa = step_cost(hy, 8, 32768, 32768, 8, 8, "prefill")
+    assert swa["flops"] < full["flops"]

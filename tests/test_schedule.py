@@ -1,0 +1,196 @@
+"""Tests for BSP scheduling with replication (paper §3.3, §6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hypergraph import Dag
+from repro.core.schedule import (AdvancedOptions, BspInstance, Schedule,
+                                 advanced_heuristic, baseline_schedule,
+                                 basic_heuristic, bspg_schedule, exact_schedule,
+                                 hill_climb)
+
+
+def random_dag(n, seed, fanin=3, p_edge=0.5, n_src=10):
+    rng = np.random.default_rng(seed)
+    edges = []
+    for v in range(n_src, n):
+        for u in rng.choice(v, size=min(fanin, v), replace=False):
+            if rng.random() < p_edge:
+                edges.append((int(u), v))
+    return Dag(n=n, edge_list=edges)
+
+
+class TestCostModel:
+    def test_figure2_example(self):
+        """Paper Fig. 2: replicating v on p2 removes the comm, cost drops."""
+        # DAG: a -> v, b -> v, v -> c ; a,b also needed by p2's own chain.
+        # 0=a 1=b 2=v 3=c(on p2) 4,5 fillers on p2
+        dag = Dag(n=6, edge_list=[(0, 2), (1, 2), (2, 3), (4, 5)])
+        inst = BspInstance(dag, P=2, g=2.0, L=1.0)
+        s = Schedule(inst, 3)
+        s.add_comp(0, 0, 0); s.add_comp(1, 0, 0)   # a, b on p1 s1
+        s.add_comp(4, 1, 0)                        # filler on p2
+        s.add_comm(0, 0, 1, 0); s.add_comm(1, 0, 1, 0)  # send a, b to p2
+        s.add_comp(2, 0, 1)                        # v on p1 s2
+        s.add_comm(2, 0, 1, 1)                     # send v to p2
+        s.add_comp(5, 1, 1)
+        s.add_comp(3, 1, 2)                        # c on p2 s3 uses v
+        assert not s.validate()
+        cost_comm = s.cost()
+        # now replicate v on p2 in superstep 3 instead of communicating
+        s.remove_comm(2, 1)
+        s.add_comp(2, 1, 2)
+        assert not s.validate()
+        assert s.cost() < cost_comm
+
+    def test_h_relation_max(self):
+        dag = Dag(n=4, edge_list=[])
+        inst = BspInstance(dag, P=2, g=3.0, L=5.0)
+        s = Schedule(inst, 1)
+        for v in range(4):
+            s.add_comp(v, v % 2, 0)
+        assert s.cost() == 2.0  # pure compute, no L charged
+        s.add_comm(0, 0, 1, 0)
+        s.add_comm(1, 0, 1, 0)
+        # h = max(sent p0, recv p1) = 2 -> L + g*2 = 11
+        assert s.cost() == 2.0 + 5.0 + 3.0 * 2
+
+    def test_incremental_cost_matches_full(self):
+        dag = random_dag(60, 0)
+        inst = BspInstance(dag, P=4, g=2.0, L=3.0)
+        s = bspg_schedule(inst)
+        assert abs(s.current_cost() - s.cost()) < 1e-9
+        s2 = basic_heuristic(s.copy())
+        assert abs(s2.current_cost() - s2.cost()) < 1e-9
+
+
+class TestBaseline:
+    def test_valid_and_complete(self):
+        dag = random_dag(200, 1)
+        inst = BspInstance(dag, P=4, g=4.0, L=20.0)
+        s = baseline_schedule(inst)
+        assert not s.validate()
+
+    def test_sequential_candidate(self):
+        # with huge g, baseline should fall back to the sequential schedule
+        dag = Dag(n=8, edge_list=[(i, i + 4) for i in range(4)])
+        inst = BspInstance(dag, P=4, g=1e6, L=1e6)
+        s = baseline_schedule(inst)
+        assert s.current_cost() <= 8.0 + 1e-9
+
+    def test_weighted_nodes(self):
+        rng = np.random.default_rng(2)
+        dag = random_dag(100, 2)
+        dag.omega = rng.uniform(1, 5, size=100)
+        dag.mu = rng.uniform(1, 3, size=100)
+        inst = BspInstance(dag, P=4, g=2.0, L=10.0)
+        s = baseline_schedule(inst)
+        assert not s.validate()
+        assert abs(s.current_cost() - s.cost()) < 1e-9
+
+
+class TestReplication:
+    def test_appendix_a1_bipartite(self):
+        """Replication parallelizes the complete-bipartite DAG (App. A.1)."""
+        P, c, m = 4, 4, 6
+        n = m * (c * P + 1)
+        edges = [(u, v) for u in range(m) for v in range(m, n)]
+        dag = Dag(n=n, edge_list=edges)
+        inst = BspInstance(dag, P=P, g=float(P * (P * c + 1) + 1), L=1.0)
+        base = baseline_schedule(inst)
+        from repro.core.schedule import best_replicated_schedule
+        rep = best_replicated_schedule(inst, baseline=base)
+        assert not rep.validate()
+        # without replication optimum is ~n (sequential); with replication
+        # the U-set is replicated everywhere and the cost drops to ~(c+1)*m
+        assert base.current_cost() >= n * 0.9
+        assert rep.current_cost() <= (c + 1) * m * 1.5
+        # theoretical ratio (P*c+1)/(c+1) = 3.4 for these parameters
+        assert base.current_cost() / rep.current_cost() >= 2.5
+
+    def test_basic_never_hurts(self):
+        dag = random_dag(150, 3)
+        inst = BspInstance(dag, P=8, g=4.0, L=20.0)
+        base = baseline_schedule(inst)
+        rep = basic_heuristic(base.copy())
+        assert rep.current_cost() <= base.current_cost() + 1e-9
+        assert not rep.validate()
+
+    def test_advanced_beats_basic(self):
+        dag = random_dag(300, 4)
+        inst = BspInstance(dag, P=8, g=4.0, L=20.0)
+        base = baseline_schedule(inst)
+        b = basic_heuristic(base.copy())
+        a = advanced_heuristic(base.copy())
+        assert a.current_cost() <= b.current_cost() + 1e-9
+        assert not a.validate()
+
+    def test_components_isolated(self):
+        dag = random_dag(200, 5)
+        inst = BspInstance(dag, P=4, g=8.0, L=40.0)
+        base = baseline_schedule(inst)
+        for key in ("batch_replication", "superstep_merging",
+                    "superstep_replication"):
+            opts = AdvancedOptions(batch_replication=False,
+                                   superstep_merging=False,
+                                   superstep_replication=False)
+            setattr(opts, key, True)
+            out = advanced_heuristic(base.copy(), opts)
+            assert not out.validate(), key
+            assert out.current_cost() <= base.current_cost() + 1e-9
+
+
+class TestExact:
+    def test_exact_beats_or_ties_heuristic(self):
+        dag = Dag(n=10, edge_list=[(0, 3), (1, 3), (1, 4), (2, 4), (3, 5),
+                                   (4, 6), (5, 7), (6, 7), (3, 8), (4, 9)])
+        inst = BspInstance(dag, P=2, g=4.0, L=5.0)
+        ex = exact_schedule(inst, max_supersteps=3, time_limit=30)
+        heur = baseline_schedule(inst)
+        assert ex.assignments_optimal
+        assert ex.cost <= heur.current_cost() + 1e-9
+        assert not ex.schedule.validate()
+
+    def test_chain_dag_sequential(self):
+        # chain DAGs: replication never helps (paper Lemma 4.3);
+        # the optimum on one processor is n (no comm possible anyway).
+        dag = Dag(n=6, edge_list=[(i, i + 1) for i in range(5)])
+        inst = BspInstance(dag, P=2, g=2.0, L=1.0)
+        ex = exact_schedule(inst, max_supersteps=3, time_limit=30)
+        assert abs(ex.cost - 6.0) < 1e-9
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_property_pipeline_validity_and_monotonicity(seed):
+    """Every stage of the pipeline yields a valid schedule and never
+    increases cost."""
+    dag = random_dag(80, seed, fanin=2)
+    inst = BspInstance(dag, P=4, g=float(1 + seed % 5), L=float(seed % 30))
+    s0 = bspg_schedule(inst, seed=seed)
+    assert not s0.validate()
+    c0 = s0.current_cost()
+    s1 = hill_climb(s0, seed=seed)
+    assert not s1.validate()
+    c1 = s1.current_cost()
+    s2 = advanced_heuristic(s1.copy())
+    assert not s2.validate()
+    c2 = s2.current_cost()
+    assert c1 <= c0 + 1e-9
+    assert c2 <= c1 + 1e-9
+    # replication semantics: every node computed somewhere; cost matches
+    assert abs(s2.current_cost() - s2.cost()) < 1e-6
+
+
+def test_surplus_cost_definition():
+    """Paper Definition 4.4: surplus = cost - omega(V)/P; zero for a
+    perfectly balanced communication-free schedule."""
+    from repro.core.schedule import Schedule
+    dag = Dag(n=8, edge_list=[])
+    inst = BspInstance(dag, P=4, g=2.0, L=5.0)
+    s = Schedule(inst, 1)
+    for v in range(8):
+        s.add_comp(v, v % 4, 0)
+    assert abs(s.surplus_cost() - 0.0) < 1e-9
+    s.add_comm(0, 0, 1, 0)
+    assert s.surplus_cost() == 5.0 + 2.0  # L + g*1
