@@ -5,6 +5,11 @@ non-replicating optimum (exact B&B on small instances, heuristic beyond)
 vs replication (ILP/D and ILP/R semantics: capped / unlimited replicas),
 cost-reduction ratio = 1 - geomean(repl/base), zero-cost cases counted
 separately -- exactly the paper's metric (§7.1).
+
+``bench_engine`` additionally tracks the incremental-gain engine's
+throughput against the preserved seed implementation
+(``core.partition.reference``) at instance sizes the seed could not touch;
+its output lands in ``BENCH_partition.json`` via ``run.py``.
 """
 from __future__ import annotations
 
@@ -13,10 +18,13 @@ import time
 
 import numpy as np
 
-from repro.core.partition import (exact_partition, partition_cost,
+from repro.core.partition import (exact_partition, is_valid, partition_cost,
                                   partition_heuristic,
+                                  partition_with_replication,
                                   replicate_local_search)
+from repro.core.partition.reference import partition_heuristic_reference
 from repro.datagen import moe_dataset, spmv_dataset
+from repro.datagen.spmv import row_net_hypergraph, synthetic_sparse_matrix
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 
@@ -70,12 +78,16 @@ def fig4_reductions(P=2, eps=0.025, count=None):
     out = {}
     for name, ds in _datasets(count).items():
         pairs = []
+        t0 = time.perf_counter()
         for hg in ds:
             b, r, _ = solve_pair(hg, P, eps, mode="rep")
             pairs.append((b, r))
+        dt = time.perf_counter() - t0
         red, zeros = mean_reduction(pairs)
         out[name] = {"reduction_pct": red, "zeros": zeros,
-                     "pairs": [(float(b), float(r)) for b, r in pairs]}
+                     "pairs": [(float(b), float(r)) for b, r in pairs],
+                     "seconds": dt,
+                     "instances_per_sec": len(ds) / dt if dt > 0 else 0.0}
     return out
 
 
@@ -118,6 +130,56 @@ def table_forms(P=4, eps=0.05, count=None):
     return out
 
 
+def bench_engine(P=4, eps=0.05, seed=0):
+    """Old-vs-new engine throughput at growing instance sizes.
+
+    The seed implementation re-ran exact set cover per candidate move; the
+    engine prices moves in O(degree).  The reference is only timed up to
+    ``ref_limit`` nodes (beyond that a single run takes minutes -- exactly
+    the scaling wall this PR removes); engine-only rows keep growing.
+    Returns rows with instances/sec and best cost, plus replication results
+    at the largest size.
+    """
+    sizes = (128, 256, 512, 1024, 2048) if FULL else (128, 256, 512, 1024)
+    ref_limit = 512
+    rows = []
+    for n in sizes:
+        nz = synthetic_sparse_matrix(n, n, seed=seed + n)
+        hg = row_net_hypergraph(nz, n, name=f"spmv_rn_{n}")
+        t0 = time.perf_counter()
+        new = partition_heuristic(hg, P, eps, seed=seed)
+        t_new = time.perf_counter() - t0
+        assert is_valid(hg, new.masks, P, eps)
+        row = {
+            "n": hg.n, "edges": len(hg.edges), "pins": int(hg.num_pins),
+            "P": P, "eps": eps,
+            "engine_seconds": t_new,
+            "engine_instances_per_sec": 1.0 / t_new,
+            "engine_cost": float(new.cost),
+        }
+        if hg.n <= ref_limit:
+            t0 = time.perf_counter()
+            _, ref_cost = partition_heuristic_reference(hg, P, eps, seed=seed)
+            t_ref = time.perf_counter() - t0
+            row.update(ref_seconds=t_ref, ref_cost=float(ref_cost),
+                       speedup=t_ref / t_new,
+                       cost_not_worse=bool(new.cost <= ref_cost + 1e-9))
+        rows.append(row)
+    # replication on the largest instance: the end-to-end path at a size
+    # the seed search could not finish in reasonable time
+    nz = synthetic_sparse_matrix(sizes[-1], sizes[-1], seed=seed)
+    hg = row_net_hypergraph(nz, sizes[-1], name="spmv_rn_large")
+    t0 = time.perf_counter()
+    base, rep = partition_with_replication(hg, P, eps, mode="rep",
+                                           exact_node_limit=0, seed=seed)
+    t_rep = time.perf_counter() - t0
+    large = {"n": hg.n, "base_cost": float(base.cost),
+             "rep_cost": float(rep.cost), "seconds": t_rep,
+             "reduction_pct": (100.0 * (1 - rep.cost / base.cost)
+                               if base.cost > 0 else 0.0)}
+    return {"scale": rows, "replication_large": large}
+
+
 def run_all():
     t0 = time.time()
     results = {}
@@ -125,6 +187,7 @@ def run_all():
     results["fig4_P4"] = fig4_reductions(P=4, eps=0.05)
     results["table1"] = table1_eps_sweep()
     results["forms"] = table_forms()
+    results["engine"] = bench_engine()
     results["seconds"] = time.time() - t0
     return results
 

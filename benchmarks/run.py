@@ -12,6 +12,7 @@ import pathlib
 import sys
 import time
 
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 RESULTS = pathlib.Path(__file__).parent / "results"
@@ -42,6 +43,27 @@ def main() -> None:
               f"mean_reduction={mean:.1f}%")
     _emit("partition_forms_DvsR", part["seconds"],
           f"wins={part['forms']['wins']}")
+
+    # ---- partition-engine perf trajectory (machine-readable) -------------
+    # BENCH_partition.json at the repo root: instances/sec and best cost per
+    # dataset, plus old-vs-new engine throughput -- future PRs diff this.
+    bench = {
+        "engine_scale": part["engine"]["scale"],
+        "replication_large": part["engine"]["replication_large"],
+        "datasets": {
+            ds: {"instances_per_sec": row["instances_per_sec"],
+                 "best_cost": min((r for _, r in row["pairs"]), default=0.0)}
+            for ds, row in part["fig4_P4"].items()
+        },
+    }
+    (pathlib.Path(__file__).resolve().parents[1]
+     / "BENCH_partition.json").write_text(json.dumps(bench, indent=1))
+    for row in part["engine"]["scale"]:
+        spd = (f";speedup_vs_seed={row['speedup']:.1f}x"
+               if "speedup" in row else "")
+        _emit(f"partition_engine_n{row['n']}", row["engine_seconds"],
+              f"inst_per_sec={row['engine_instances_per_sec']:.2f};"
+              f"cost={row['engine_cost']:.0f}" + spd)
 
     # ---- scheduling (paper Tables 2, 3, 4) -------------------------------
     sched = scheduling.run_all()

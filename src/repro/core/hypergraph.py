@@ -37,18 +37,85 @@ class Hypergraph:
         for e in self.edges:
             if any(v < 0 or v >= self.n for v in e):
                 raise ValueError(f"edge {e} out of range for n={self.n}")
+        self._csr: tuple[np.ndarray, ...] | None = None
 
     @property
     def num_pins(self) -> int:
         return sum(len(e) for e in self.edges)
 
+    # ------------------------------------------------------------- CSR layout
+    # Two cached compressed-sparse-row views of the pin relation; everything
+    # in core/partition iterates these flat arrays instead of python lists.
+    #   * edge -> pins:  pins[xpins[e] : xpins[e+1]]      (node ids)
+    #   * node -> edges: inc_edges[xinc[v] : xinc[v+1]]   (edge ids)
+    # ``edges`` must not be mutated after construction (the cache would go
+    # stale); build a new Hypergraph instead.
+    def _build_csr(self) -> tuple[np.ndarray, ...]:
+        if self._csr is not None:
+            return self._csr
+        m = len(self.edges)
+        lens = np.fromiter((len(e) for e in self.edges), dtype=np.int64,
+                           count=m)
+        xpins = np.zeros(m + 1, dtype=np.int64)
+        np.cumsum(lens, out=xpins[1:])
+        total = int(xpins[-1])
+        pins = np.fromiter((v for e in self.edges for v in e),
+                           dtype=np.int64, count=total)
+        edge_of_pin = np.repeat(np.arange(m, dtype=np.int64), lens)
+        order = np.argsort(pins, kind="stable")
+        inc_edges = edge_of_pin[order]
+        xinc = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(np.bincount(pins, minlength=self.n), out=xinc[1:])
+        # pin-adjacency: for node v, the concatenated pins of its incident
+        # edges (multiset, edge order) -- the BFS frontier of greedy growth.
+        e_lens = lens[inc_edges]
+        node_tot = np.zeros(self.n, dtype=np.int64)
+        np.add.at(node_tot, pins, lens[edge_of_pin])
+        xadj = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(node_tot, out=xadj[1:])
+        if e_lens.sum():
+            starts = xpins[inc_edges]
+            offs = np.arange(int(e_lens.sum()), dtype=np.int64)
+            offs -= np.repeat(np.cumsum(e_lens) - e_lens, e_lens)
+            adj = pins[np.repeat(starts, e_lens) + offs]
+        else:
+            adj = np.zeros(0, dtype=np.int64)
+        self._csr = (xpins, pins, xinc, inc_edges, xadj, adj)
+        return self._csr
+
+    @property
+    def xpins(self) -> np.ndarray:
+        return self._build_csr()[0]
+
+    @property
+    def pins(self) -> np.ndarray:
+        return self._build_csr()[1]
+
+    @property
+    def xinc(self) -> np.ndarray:
+        return self._build_csr()[2]
+
+    @property
+    def inc_edges(self) -> np.ndarray:
+        return self._build_csr()[3]
+
+    @property
+    def xadj(self) -> np.ndarray:
+        return self._build_csr()[4]
+
+    @property
+    def adj_nodes(self) -> np.ndarray:
+        return self._build_csr()[5]
+
     def incident_edges(self) -> list[list[int]]:
-        """For each node, the list of edge indices containing it."""
-        inc: list[list[int]] = [[] for _ in range(self.n)]
-        for ei, e in enumerate(self.edges):
-            for v in e:
-                inc[v].append(ei)
-        return inc
+        """For each node, the list of edge indices containing it.
+
+        Compatibility view over the incident CSR; prefer ``xinc``/``inc_edges``
+        in hot paths.
+        """
+        xinc, inc_edges = self.xinc, self.inc_edges
+        return [inc_edges[xinc[v]:xinc[v + 1]].tolist()
+                for v in range(self.n)]
 
     def remove_isolated(self) -> "Hypergraph":
         """Drop nodes appearing in no hyperedge (paper §B.1 does the same)."""

@@ -1,12 +1,13 @@
-from .cost import (capacity, edge_cost, is_balanced, is_valid, loads,
-                   min_cover, partition_cost)
+from .cost import (capacity, edge_cost, edge_lambdas, is_balanced, is_valid,
+                   loads, min_cover, partition_cost)
+from .engine import PartitionState
 from .exact import ExactResult, exact_partition
 from .heuristic import (HeuristicResult, partition_heuristic,
                         partition_with_replication, replicate_local_search)
 
 __all__ = [
-    "capacity", "edge_cost", "is_balanced", "is_valid", "loads", "min_cover",
-    "partition_cost", "ExactResult", "exact_partition", "HeuristicResult",
-    "partition_heuristic", "partition_with_replication",
-    "replicate_local_search",
+    "capacity", "edge_cost", "edge_lambdas", "is_balanced", "is_valid",
+    "loads", "min_cover", "partition_cost", "PartitionState", "ExactResult",
+    "exact_partition", "HeuristicResult", "partition_heuristic",
+    "partition_with_replication", "replicate_local_search",
 ]

@@ -54,22 +54,37 @@ def edge_cost(hg: Hypergraph, masks: np.ndarray, ei: int, P: int) -> float:
     return float(hg.mu[ei]) * max(0, lam - 1)
 
 
+def edge_lambdas(hg: Hypergraph, masks: np.ndarray, P: int) -> np.ndarray:
+    """Vectorized lambda_e for every hyperedge at once.
+
+    Batch analogue of the engine's uncovered-subset table: one reduceat
+    over the CSR pin array replaces a python set-cover per edge.  Falls
+    back to the scalar path for P beyond the table limit.
+    """
+    from .engine import _MAX_P, _lambda_from_rows, _tables, _uncov_rows
+
+    m = len(hg.edges)
+    if m == 0:
+        return np.zeros(0, dtype=np.int16)
+    if P > _MAX_P:
+        return np.array([min_cover([int(masks[v]) for v in e], P)
+                         for e in hg.edges], dtype=np.int16)
+    _, order, order_pc, contrib = _tables(P)
+    masks = np.asarray(masks, dtype=np.int64)
+    uncov = _uncov_rows(masks, hg.pins, hg.xpins, contrib)
+    return _lambda_from_rows(uncov, order, order_pc)
+
+
 def partition_cost(hg: Hypergraph, masks: np.ndarray, P: int) -> float:
     """Total (lambda_e - 1) connectivity cost under replication semantics."""
-    total = 0.0
-    for ei in range(len(hg.edges)):
-        total += edge_cost(hg, masks, ei, P)
-    return total
+    lam = edge_lambdas(hg, masks, P).astype(np.float64)
+    return float((hg.mu * np.maximum(lam - 1, 0)).sum())
 
 
 def loads(hg: Hypergraph, masks: np.ndarray, P: int) -> np.ndarray:
-    out = np.zeros(P, dtype=np.float64)
-    for v in range(hg.n):
-        m = int(masks[v])
-        for p in range(P):
-            if (m >> p) & 1:
-                out[p] += hg.omega[v]
-    return out
+    masks = np.asarray(masks, dtype=np.int64)
+    bits = (masks[:, None] >> np.arange(P)) & 1
+    return (bits * hg.omega[:, None]).sum(axis=0).astype(np.float64)
 
 
 def is_balanced(hg: Hypergraph, masks: np.ndarray, P: int, eps: float) -> bool:

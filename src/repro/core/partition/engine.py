@@ -1,0 +1,398 @@
+"""Incremental-gain partition engine (the FM-style core of this package).
+
+The seed implementation re-ran exact set cover (``min_cover``) over every
+incident hyperedge for each candidate move -- O(deg(v) * pins * 2^P) per
+evaluation, which caps local search at toy instance sizes.  ``PartitionState``
+maintains enough per-edge state to evaluate any single-node mask change in
+O(deg(v) * 2^P) and apply/undo it in the same bound, with exact
+``min_cover`` semantics (not the connectivity approximation classical FM
+uses).
+
+Representation
+--------------
+For each hyperedge ``e`` and each processor subset ``S`` (all ``2^P`` of
+them) we keep
+
+    uncov[e, S] = #\\{assigned pins v in e : masks[v] & S == 0\\}
+
+i.e. the number of pins *not* covered by ``S``.  Then
+
+    lambda_e = min\\{ popcount(S) : S != 0, uncov[e, S] == 0 \\}
+
+which is exactly the minimum set cover of the pin masks (``uncov[e, 0]``
+doubles as the count of assigned pins; unassigned pins -- mask 0 -- are
+excluded, so the same state drives the exact solver's monotone lower bound
+over partial assignments).  Changing one pin's mask from ``a`` to ``b``
+adds the precomputed row ``contrib[b] - contrib[a]`` to ``uncov[e]``: a
+table lookup plus a vector add of length ``2^P``.
+
+Complexity (P constant): ``delta_*`` and ``apply`` are O(deg(v) * 2^P);
+``undo`` is the same; construction is O(pins * 2^P).  Memory is
+O(|E| * 2^P) for ``uncov`` plus the O(4^P) mask tables, which bounds the
+engine to P <= 12 (the paper's experiments use P in {2, 4, 8}).
+
+Invariants (asserted by ``check()``):
+  * ``uncov`` matches a from-scratch count over current masks;
+  * ``edge_lambda[e]`` equals ``min_cover`` of e's assigned pin masks;
+  * ``cost == sum_e mu[e] * max(0, edge_lambda[e] - 1)``;
+  * ``loads[p] == sum_{v: masks[v] has bit p} omega[v]``.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from ..hypergraph import Hypergraph
+
+_MAX_P = 12
+
+
+@functools.lru_cache(maxsize=None)
+def _tables(P: int):
+    """(popcnt, order, order_pc, contrib) for processor count P.
+
+    ``order`` lists the non-empty subsets sorted by popcount (ties by
+    value), so the first subset with ``uncov == 0`` is a minimum cover.
+    ``contrib[m]`` is the row a pin with mask ``m`` adds to ``uncov``:
+    zero for unassigned pins, else ``1 - (m & S != 0)`` over all S.
+    """
+    if P < 1 or P > _MAX_P:
+        raise ValueError(f"engine supports 1 <= P <= {_MAX_P}, got {P}")
+    nsub = 1 << P
+    subsets = np.arange(nsub)
+    popcnt = np.array([bin(s).count("1") for s in range(nsub)], dtype=np.int16)
+    order = np.array(sorted(range(1, nsub), key=lambda s: (popcnt[s], s)),
+                     dtype=np.int64)
+    hits = (subsets[:, None] & subsets[None, :]) != 0        # hits[m, S]
+    contrib = (1 - hits.astype(np.int16))
+    contrib[0] = 0                                           # mask 0 = unassigned
+    return popcnt, order, popcnt[order], contrib
+
+
+def _uncov_rows(masks: np.ndarray, pins: np.ndarray, xpins: np.ndarray,
+                contrib: np.ndarray) -> np.ndarray:
+    """uncov matrix (|E|, 2^P): per edge, sum of its pins' contrib rows.
+
+    Single home of the reduceat segmentation, shared by the engine and the
+    batch cost path.  Empty edges (including trailing ones, whose start
+    index would fall off the pins array) come out as all-zero rows.
+    """
+    m = len(xpins) - 1
+    nsub = contrib.shape[0]
+    rows = np.zeros((m, nsub), dtype=np.int32)
+    if m == 0 or len(pins) == 0:
+        return rows
+    # reduceat over non-empty edges only: their starts are strictly
+    # increasing and in range, and consecutive non-empty starts delimit
+    # exactly one edge's pins (empty edges contribute no pins in between)
+    nonempty = xpins[:-1] < xpins[1:]
+    rows[nonempty] = np.add.reduceat(
+        contrib[masks[pins]], xpins[:-1][nonempty], axis=0)
+    return rows
+
+
+def _lambda_from_rows(rows: np.ndarray, order: np.ndarray,
+                      order_pc: np.ndarray) -> np.ndarray:
+    """Min-cover size per uncov row (0 for rows with no assigned pin)."""
+    if rows.shape[0] == 0:
+        return np.zeros(0, dtype=np.int16)
+    lam = order_pc[np.argmax(rows[:, order] == 0, axis=1)].astype(np.int16)
+    lam[rows[:, 0] == 0] = 0
+    return lam
+
+
+class PartitionState:
+    """Mutable partition assignment with O(degree) incremental costs.
+
+    ``masks[v]`` is the processor bitmask of node v; 0 means *unassigned*
+    (allowed -- the exact solver grows partial assignments through the same
+    engine).  All ``delta_*`` methods are pure; ``apply`` mutates and pushes
+    an undo record.
+
+    Two interchangeable backends share the semantics:
+
+      * ``backend='numpy'`` (default): ``uncov`` is one (|E|, 2^P) array and
+        every operation is a few vectorized calls -- right for heuristic
+        local search, where ``delta_masks`` prices many candidates at once;
+      * ``backend='python'``: ``uncov`` rows are plain lists updated in
+        pure python -- per-operation numpy dispatch (~microseconds) would
+        dominate the branch-and-bound solver, which applies/undoes one tiny
+        assignment per search node.
+    """
+
+    def __init__(self, hg: Hypergraph, P: int,
+                 masks: np.ndarray | None = None,
+                 backend: str = "numpy") -> None:
+        if backend not in ("numpy", "python"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.hg = hg
+        self.P = int(P)
+        self.popcnt, self._order, self._order_pc, self._contrib = _tables(P)
+        self.xpins = hg.xpins
+        self.pins = hg.pins
+        self.xinc = hg.xinc
+        self.inc_edges = hg.inc_edges
+        self.mu = np.asarray(hg.mu, dtype=np.float64)
+        self.omega = np.asarray(hg.omega, dtype=np.float64)
+        m = len(hg.edges)
+        nsub = 1 << self.P
+        if masks is None:
+            self.masks = np.zeros(hg.n, dtype=np.int64)
+        else:
+            self.masks = np.asarray(masks, dtype=np.int64).copy()
+            if self.masks.shape != (hg.n,):
+                raise ValueError("masks must have shape (n,)")
+            if np.any(self.masks < 0) or np.any(self.masks >= (1 << self.P)):
+                raise ValueError("mask out of range for P")
+        # uncov[e] = sum of contrib rows of e's pins  (vectorized build)
+        self.uncov = _uncov_rows(self.masks, self.pins, self.xpins,
+                                 self._contrib)
+        self.edge_lambda = self._lambda_rows(self.uncov)
+        self.cost = float(
+            (self.mu * np.maximum(self.edge_lambda - 1, 0)).sum())
+        bits = (self.masks[:, None] >> np.arange(self.P)) & 1
+        self.loads = (bits * self.omega[:, None]).sum(axis=0)
+        self._undo: list[tuple[int, int, list | np.ndarray]] = []
+        if backend == "python":
+            # plain-python mirrors; the numpy arrays above are build-only
+            self._uncov_l = self.uncov.tolist()
+            self._lam_l = self.edge_lambda.tolist()
+            self.uncov = None
+            self.edge_lambda = None
+            self._contrib_l = self._contrib.tolist()
+            self._order_pairs = list(zip(self._order.tolist(),
+                                         self._order_pc.tolist()))
+            self._inc_l = [self.inc_edges[self.xinc[v]:self.xinc[v + 1]]
+                           .tolist() for v in range(hg.n)]
+            self._mu_l = self.mu.tolist()
+            self._nsub = nsub
+            self.loads = self.loads.tolist()
+            self._omega_l = self.omega.tolist()
+
+    # ---------------------------------------------------------------- lambdas
+    def _lambda_rows(self, rows: np.ndarray) -> np.ndarray:
+        return _lambda_from_rows(rows, self._order, self._order_pc)
+
+    def _incident(self, v: int) -> np.ndarray:
+        return self.inc_edges[self.xinc[v]:self.xinc[v + 1]]
+
+    # ------------------------------------------------- scalar (python) backend
+    def _delta_py(self, v: int, new_mask: int) -> float:
+        old = int(self.masks[v])
+        if new_mask == old:
+            return 0.0
+        ca, cb = self._contrib_l[old], self._contrib_l[new_mask]
+        d = 0.0
+        for ei in self._inc_l[v]:
+            row = self._uncov_l[ei]
+            if row[0] + cb[0] - ca[0] == 0:
+                lam_new = 0
+            else:
+                for s, pc in self._order_pairs:
+                    if row[s] + cb[s] - ca[s] == 0:
+                        lam_new = pc
+                        break
+            lam_old = self._lam_l[ei]
+            d += self._mu_l[ei] * ((lam_new - 1 if lam_new else 0)
+                                   - (lam_old - 1 if lam_old else 0))
+        return d
+
+    def _apply_py(self, v: int, new_mask: int) -> float:
+        old = int(self.masks[v])
+        inc = self._inc_l[v]
+        self._undo.append((v, old, [self._lam_l[ei] for ei in inc]))
+        if new_mask == old:
+            return 0.0
+        ca, cb = self._contrib_l[old], self._contrib_l[new_mask]
+        delta = 0.0
+        for ei in inc:
+            row = self._uncov_l[ei]
+            for s in range(self._nsub):
+                row[s] += cb[s] - ca[s]
+            if row[0] == 0:
+                lam_new = 0
+            else:
+                for s, pc in self._order_pairs:
+                    if row[s] == 0:
+                        lam_new = pc
+                        break
+            lam_old = self._lam_l[ei]
+            delta += self._mu_l[ei] * ((lam_new - 1 if lam_new else 0)
+                                       - (lam_old - 1 if lam_old else 0))
+            self._lam_l[ei] = lam_new
+        self.cost += delta
+        self._shift_loads(v, old, new_mask)
+        self.masks[v] = new_mask
+        return delta
+
+    def _undo_py(self) -> None:
+        v, old, old_lams = self._undo.pop()
+        cur = int(self.masks[v])
+        if cur == old:
+            return
+        ca, cb = self._contrib_l[cur], self._contrib_l[old]
+        delta = 0.0
+        for ei, lam_old in zip(self._inc_l[v], old_lams):
+            row = self._uncov_l[ei]
+            for s in range(self._nsub):
+                row[s] += cb[s] - ca[s]
+            lam_cur = self._lam_l[ei]
+            delta += self._mu_l[ei] * ((lam_old - 1 if lam_old else 0)
+                                       - (lam_cur - 1 if lam_cur else 0))
+            self._lam_l[ei] = lam_old
+        self.cost += delta
+        self._shift_loads(v, cur, old)
+        self.masks[v] = old
+
+    def _shift_loads(self, v: int, old: int, new: int) -> None:
+        w = (self._omega_l[v] if self.backend == "python"
+             else self.omega[v])
+        diff = new ^ old
+        p = 0
+        while diff:
+            if diff & 1:
+                self.loads[p] += w if (new >> p) & 1 else -w
+            diff >>= 1
+            p += 1
+
+    # ----------------------------------------------------------------- deltas
+    def delta_set_mask(self, v: int, new_mask: int) -> float:
+        """Cost change of ``masks[v] -> new_mask`` (pure, O(deg * 2^P))."""
+        if self.backend == "python":
+            return self._delta_py(v, new_mask)
+        old = int(self.masks[v])
+        if new_mask == old:
+            return 0.0
+        inc = self._incident(v)
+        if inc.size == 0:
+            return 0.0
+        rows = self.uncov[inc] + (self._contrib[new_mask]
+                                  - self._contrib[old])[None, :]
+        lam_new = self._lambda_rows(rows).astype(np.float64)
+        lam_old = self.edge_lambda[inc].astype(np.float64)
+        return float((self.mu[inc] * (np.maximum(lam_new - 1, 0)
+                                      - np.maximum(lam_old - 1, 0))).sum())
+
+    def delta_masks(self, v: int, new_masks: np.ndarray) -> np.ndarray:
+        """Cost change for each candidate mask in ``new_masks`` at once.
+
+        One vectorized pass over a (K, deg, 2^P) tensor -- amortizes numpy
+        call overhead across all K candidates of a node (the inner loop of
+        FM refinement and the add-replica search).
+        """
+        new_masks = np.asarray(new_masks, dtype=np.int64)
+        if self.backend == "python":
+            return np.array([self._delta_py(v, int(m)) for m in new_masks])
+        old = int(self.masks[v])
+        inc = self._incident(v)
+        if inc.size == 0:
+            return np.zeros(len(new_masks), dtype=np.float64)
+        rows = (self.uncov[inc][None, :, :]
+                + (self._contrib[new_masks]
+                   - self._contrib[old])[:, None, :])
+        K, deg, nsub = rows.shape
+        lam = self._lambda_rows(rows.reshape(K * deg, nsub)) \
+            .astype(np.float64).reshape(K, deg)
+        base = np.maximum(self.edge_lambda[inc].astype(np.float64) - 1, 0)
+        return ((np.maximum(lam - 1, 0) - base[None, :])
+                * self.mu[inc][None, :]).sum(axis=1)
+
+    def delta_move(self, v: int, p_from: int, p_to: int) -> float:
+        m = int(self.masks[v])
+        return self.delta_set_mask(v, (m & ~(1 << p_from)) | (1 << p_to))
+
+    def delta_add_replica(self, v: int, p: int) -> float:
+        return self.delta_set_mask(v, int(self.masks[v]) | (1 << p))
+
+    def delta_drop_replica(self, v: int, p: int) -> float:
+        return self.delta_set_mask(v, int(self.masks[v]) & ~(1 << p))
+
+    # ------------------------------------------------------------ application
+    def apply(self, v: int, new_mask: int) -> float:
+        """Set ``masks[v] = new_mask``; returns the cost delta.
+
+        Records an undo entry (see ``undo``/``commit``).
+        """
+        if self.backend == "python":
+            return self._apply_py(v, new_mask)
+        old = int(self.masks[v])
+        inc = self._incident(v)
+        old_lams = self.edge_lambda[inc].copy()
+        self._undo.append((v, old, old_lams))
+        if new_mask == old:
+            return 0.0
+        delta = 0.0
+        if inc.size:
+            self.uncov[inc] += (self._contrib[new_mask]
+                                - self._contrib[old])[None, :]
+            lam_new = self._lambda_rows(self.uncov[inc])
+            delta = float(
+                (self.mu[inc] * (np.maximum(lam_new - 1, 0)
+                                 - np.maximum(old_lams - 1, 0))).sum())
+            self.edge_lambda[inc] = lam_new
+        self.cost += delta
+        self._shift_loads(v, old, new_mask)
+        self.masks[v] = new_mask
+        return delta
+
+    def undo(self, count: int = 1) -> None:
+        """Revert the last ``count`` ``apply`` calls."""
+        if count > len(self._undo):
+            raise IndexError(
+                f"undo({count}): only {len(self._undo)} applied operations "
+                "on the undo log")
+        if self.backend == "python":
+            for _ in range(count):
+                self._undo_py()
+            return
+        for _ in range(count):
+            v, old, old_lams = self._undo.pop()
+            cur = int(self.masks[v])
+            if cur == old:
+                continue
+            inc = self._incident(v)
+            if inc.size:
+                self.uncov[inc] += (self._contrib[old]
+                                    - self._contrib[cur])[None, :]
+                cur_lams = self.edge_lambda[inc].astype(np.float64)
+                self.cost += float(
+                    (self.mu[inc] * (np.maximum(old_lams - 1, 0)
+                                     - np.maximum(cur_lams - 1, 0))).sum())
+                self.edge_lambda[inc] = old_lams
+            self._shift_loads(v, cur, old)
+            self.masks[v] = old
+
+    def commit(self) -> None:
+        """Drop undo history (accept everything applied so far)."""
+        self._undo.clear()
+
+    @property
+    def depth(self) -> int:
+        """Number of undoable ``apply`` records."""
+        return len(self._undo)
+
+    # -------------------------------------------------------------- utilities
+    def fits(self, v: int, p: int, cap: float) -> bool:
+        return self.loads[p] + self.omega[v] <= cap
+
+    def lambda_of(self, ei: int) -> int:
+        if self.backend == "python":
+            return self._lam_l[ei]
+        return int(self.edge_lambda[ei])
+
+    def check(self) -> None:
+        """Assert all invariants against a from-scratch rebuild (tests)."""
+        fresh = PartitionState(self.hg, self.P, masks=self.masks)
+        if self.backend == "python":
+            uncov = np.asarray(self._uncov_l, dtype=np.int32).reshape(
+                fresh.uncov.shape)
+            lam = np.asarray(self._lam_l, dtype=np.int16)
+        else:
+            uncov, lam = self.uncov, self.edge_lambda
+        assert np.array_equal(fresh.uncov, uncov), "uncov drifted"
+        assert np.array_equal(fresh.edge_lambda, lam), "edge_lambda drifted"
+        assert abs(fresh.cost - self.cost) < 1e-6, \
+            f"cost drifted: {self.cost} vs {fresh.cost}"
+        assert np.allclose(fresh.loads, self.loads), "loads drifted"

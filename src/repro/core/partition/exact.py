@@ -10,11 +10,13 @@ small instances:
   * mode='dup'   -- ILP/D semantics (§5.2.1): at most 2 replicas per node;
   * mode='rep'   -- ILP/R semantics (§5.2.2): unlimited replication.
 
-Branching assigns each node a processor *bitmask*; the lower bound is the
-connectivity cost of partially-assigned hyperedges, which is monotone:
-adding pins to an edge can only raise its minimum cover.  Processor-
-permutation symmetry is broken by only allowing a new processor index once
-all smaller indices are in use.
+Branching assigns each node a processor *bitmask*.  Partial-assignment
+state (per-edge uncovered-subset counts, loads, and the monotone lower
+bound -- the connectivity cost of partially-assigned hyperedges, which can
+only grow as pins are added) lives in the incremental ``PartitionState``
+engine: assigning a node is ``engine.apply`` (O(degree)), backtracking is
+``engine.undo``.  Processor-permutation symmetry is broken by only allowing
+a new processor index once all smaller indices are in use.
 """
 from __future__ import annotations
 
@@ -24,7 +26,8 @@ import time
 import numpy as np
 
 from ..hypergraph import Hypergraph
-from .cost import capacity, min_cover, partition_cost
+from .cost import capacity, partition_cost
+from .engine import _MAX_P, PartitionState
 
 
 @dataclasses.dataclass
@@ -59,15 +62,21 @@ def exact_partition(
     ub_masks: np.ndarray | None = None,
 ) -> ExactResult:
     assert mode in ("none", "dup", "rep")
-    n = len(hg.edges)
+    if P > _MAX_P:
+        raise ValueError(
+            f"exact_partition supports P <= {_MAX_P} (2^P subset tables); "
+            "wider meshes are heuristic-only -- use partition_heuristic")
     cap = capacity(hg, P, eps) + 1e-9
     t0 = time.monotonic()
 
-    inc = hg.incident_edges()
+    # scalar backend: B&B applies/undoes one tiny assignment per search
+    # node, where per-op numpy dispatch would dominate (see engine.py)
+    st = PartitionState(hg, P, backend="python")  # unassigned; st.cost = LB
+    xinc, inc_edges = hg.xinc, hg.inc_edges
     # order nodes by decreasing total incident edge weight (tight LBs early)
-    score = [sum(hg.mu[ei] for ei in inc[v]) for v in range(hg.n)]
+    score = [float(hg.mu[inc_edges[xinc[v]:xinc[v + 1]]].sum())
+             for v in range(hg.n)]
     order = sorted(range(hg.n), key=lambda v: -score[v])
-    pos_in_order = {v: i for i, v in enumerate(order)}
 
     cands = _candidate_masks(P, mode)
 
@@ -77,16 +86,11 @@ def exact_partition(
         best_masks = np.asarray(ub_masks).copy()
         best_cost = partition_cost(hg, best_masks, P)
 
-    masks = np.zeros(hg.n, dtype=np.int64)
-    load = np.zeros(P, dtype=np.float64)
-    # per-edge partial pin masks (list of masks of already-assigned pins)
-    edge_pins: list[list[int]] = [[] for _ in range(n)]
-    edge_lb = np.zeros(n, dtype=np.float64)  # current mu*(cover-1) of partial edge
     remaining_w = [0.0] * (hg.n + 1)
     for i in range(hg.n - 1, -1, -1):
         remaining_w[i] = remaining_w[i + 1] + hg.omega[order[i]]
 
-    state = {"explored": 0, "timed_out": False, "lb_sum": 0.0,
+    state = {"explored": 0, "timed_out": False,
              "best_cost": best_cost, "best_masks": best_masks}
 
     def dfs(idx: int, used_procs: int) -> None:
@@ -98,15 +102,19 @@ def exact_partition(
                 state["timed_out"] = True
                 return
         if idx == hg.n:
-            if state["lb_sum"] < state["best_cost"] - 1e-12:
-                state["best_cost"] = state["lb_sum"]
-                state["best_masks"] = masks.copy()
+            if st.cost < state["best_cost"] - 1e-12:
+                state["best_cost"] = st.cost
+                state["best_masks"] = st.masks.copy()
             return
         v = order[idx]
         # capacity feasibility: every remaining node needs >= its weight somewhere
-        free = float(np.maximum(cap - load, 0.0).sum())
+        free = 0.0
+        for load in st.loads:
+            if load < cap:
+                free += cap - load
         if remaining_w[idx] > free + 1e-9:
             return
+        w_v = hg.omega[v]
         for m in cands:
             # Symmetry breaking: used processors always form the prefix
             # {0..used_procs-1}; a mask may use any of those plus a
@@ -117,47 +125,19 @@ def exact_partition(
                 continue
             # balance check
             ok = True
-            k = 0
             mm = m
             while mm:
                 p = (mm & -mm).bit_length() - 1
-                if load[p] + hg.omega[v] > cap:
+                if st.loads[p] + w_v > cap:
                     ok = False
                     break
                 mm &= mm - 1
-                k += 1
             if not ok:
                 continue
-            # apply
-            delta_lb = 0.0
-            touched = []
-            mm = m
-            while mm:
-                p = (mm & -mm).bit_length() - 1
-                load[p] += hg.omega[v]
-                mm &= mm - 1
-            for ei in inc[v]:
-                edge_pins[ei].append(m)
-                new_lb = hg.mu[ei] * max(0, min_cover(edge_pins[ei], P) - 1)
-                delta_lb += new_lb - edge_lb[ei]
-                touched.append((ei, edge_lb[ei]))
-                edge_lb[ei] = new_lb
-            state["lb_sum"] += delta_lb
-            masks[v] = m
-            if state["lb_sum"] < state["best_cost"] - 1e-12:
-                new_used = max(used_procs, m.bit_length())
-                dfs(idx + 1, new_used)
-            # undo
-            masks[v] = 0
-            state["lb_sum"] -= delta_lb
-            for ei, old in reversed(touched):
-                edge_pins[ei].pop()
-                edge_lb[ei] = old
-            mm = m
-            while mm:
-                p = (mm & -mm).bit_length() - 1
-                load[p] -= hg.omega[v]
-                mm &= mm - 1
+            st.apply(v, m)
+            if st.cost < state["best_cost"] - 1e-12:
+                dfs(idx + 1, max(used_procs, m.bit_length()))
+            st.undo()
             if state["timed_out"]:
                 return
 

@@ -10,17 +10,25 @@ The paper solves instances of 80-500 nodes with a commercial ILP solver and a
     decreases and the balance constraint allows it.  ``max_replicas=2``
     gives the ILP/D search space, ``None`` the ILP/R one.
 
+All move evaluation runs on the incremental-gain ``PartitionState`` engine
+(O(degree) per candidate instead of full set-cover recomputation; see
+``engine.py``), which is what lets the local search reach hundreds-to-
+thousands of nodes.  The seed full-recompute implementation survives in
+``reference.py`` as the equivalence/benchmark oracle.
+
 This mirrors the paper's observation (§8) that replication comes "for free":
 the per-partition capacity is unchanged, replicas only consume slack.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import numpy as np
 
 from ..hypergraph import Hypergraph
 from .cost import capacity, edge_cost, min_cover, partition_cost  # noqa: F401
+from .engine import _MAX_P, PartitionState
 
 
 @dataclasses.dataclass
@@ -32,12 +40,11 @@ class HeuristicResult:
 def _greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator) -> np.ndarray:
     """BFS-grow partitions over the pin-adjacency, balanced by weight."""
     cap_target = float(hg.omega.sum()) / P  # aim for perfect balance
-    inc = hg.incident_edges()
+    xadj, adj = hg.xadj, hg.adj_nodes
     visited = np.zeros(hg.n, dtype=bool)
     part = np.zeros(hg.n, dtype=np.int64)
     order = rng.permutation(hg.n)
     cur_p, cur_w = 0, 0.0
-    from collections import deque
 
     queue: deque[int] = deque()
     qi = 0
@@ -57,60 +64,54 @@ def _greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator
             cur_w = 0.0
         part[v] = cur_p
         cur_w += hg.omega[v]
-        for ei in inc[v]:
-            for u in hg.edges[ei]:
-                if not visited[u]:
-                    queue.append(u)
+        nbr = adj[xadj[v]:xadj[v + 1]]
+        queue.extend(nbr[~visited[nbr]].tolist())
     return (1 << part).astype(np.int64)
 
 
 def _fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
-               rng: np.random.Generator, passes: int = 6) -> np.ndarray:
-    """Move-based refinement (single-assignment masks)."""
+               rng: np.random.Generator, passes: int = 6,
+               state: PartitionState | None = None) -> np.ndarray:
+    """Move-based refinement (single-assignment masks), engine-backed."""
     cap = capacity(hg, P, eps) + 1e-9
-    inc = hg.incident_edges()
-    load = np.zeros(P)
-    for v in range(hg.n):
-        load[int(masks[v]).bit_length() - 1] += hg.omega[v]
-
-    def incident_cost(v: int) -> float:
-        return sum(edge_cost(hg, masks, ei, P) for ei in inc[v])
-
+    st = state if state is not None else PartitionState(hg, P, masks=masks)
     for _ in range(passes):
         improved = False
         for v in rng.permutation(hg.n):
-            p = int(masks[v]).bit_length() - 1
-            base = incident_cost(v)
-            best_gain, best_q = 0.0, -1
-            for q in range(P):
-                if q == p or load[q] + hg.omega[v] > cap:
-                    continue
-                masks[v] = 1 << q
-                gain = base - incident_cost(v)
-                masks[v] = 1 << p
-                if gain > best_gain + 1e-12:
-                    best_gain, best_q = gain, q
-            if best_q >= 0:
-                masks[v] = 1 << best_q
-                load[p] -= hg.omega[v]
-                load[best_q] += hg.omega[v]
+            p = int(st.masks[v]).bit_length() - 1
+            targets = [q for q in range(P)
+                       if q != p and st.fits(v, q, cap)]
+            if not targets:
+                continue
+            deltas = st.delta_masks(v, np.array([1 << q for q in targets]))
+            best = int(np.argmin(deltas))
+            if deltas[best] < -1e-12:
+                st.apply(v, 1 << targets[best])
+                st.commit()
                 improved = True
         if not improved:
             break
+    masks[:] = st.masks
     return masks
 
 
 def partition_heuristic(hg: Hypergraph, P: int, eps: float,
                         restarts: int = 4, seed: int = 0) -> HeuristicResult:
     """Non-replicating baseline: greedy initial + FM refinement, best of restarts."""
+    if P > _MAX_P:  # beyond the engine's 2^P tables: scalar reference path
+        from .reference import partition_heuristic_reference
+        masks, cost = partition_heuristic_reference(hg, P, eps,
+                                                    restarts=restarts,
+                                                    seed=seed)
+        return HeuristicResult(masks=masks, cost=cost)
     rng = np.random.default_rng(seed)
     best_masks, best_cost = None, np.inf
     for _ in range(restarts):
         masks = _greedy_initial(hg, P, eps, rng)
-        masks = _fm_refine(hg, masks, P, eps, rng)
-        c = partition_cost(hg, masks, P)
-        if c < best_cost:
-            best_cost, best_masks = c, masks.copy()
+        st = PartitionState(hg, P, masks=masks)
+        _fm_refine(hg, masks, P, eps, rng, state=st)
+        if st.cost < best_cost:
+            best_cost, best_masks = st.cost, st.masks.copy()
     return HeuristicResult(masks=best_masks, cost=float(best_cost))
 
 
@@ -127,60 +128,52 @@ def replicate_local_search(
 
     Starts from any valid assignment (typically the non-replicating optimum
     or heuristic solution, as the paper suggests for warm-starting ILPs in
-    §C.1.1).
+    §C.1.1).  Every candidate is priced through the engine's O(degree)
+    delta operations; the multi-pin edge-guided move uses apply/undo.
     """
+    if P > _MAX_P:  # beyond the engine's 2^P tables: scalar reference path
+        from .reference import replicate_local_search_reference
+        out_masks, cost = replicate_local_search_reference(
+            hg, masks, P, eps, max_replicas=max_replicas,
+            max_passes=max_passes, seed=seed)
+        return HeuristicResult(masks=out_masks, cost=cost)
     rng = np.random.default_rng(seed)
-    masks = np.asarray(masks, dtype=np.int64).copy()
+    st = PartitionState(hg, P, masks=np.asarray(masks, dtype=np.int64))
     cap = capacity(hg, P, eps) + 1e-9
-    inc = hg.incident_edges()
-    load = np.zeros(P)
-    for v in range(hg.n):
-        m = int(masks[v])
-        for p in range(P):
-            if (m >> p) & 1:
-                load[p] += hg.omega[v]
-
-    def incident_cost(v: int) -> float:
-        return sum(edge_cost(hg, masks, ei, P) for ei in inc[v])
+    xpins, pins = hg.xpins, hg.pins
 
     def try_edge_move(ei: int) -> bool:
-        """Edge-guided move: a hyperedge with lambda=2 whose minority side
+        """Edge-guided move: a hyperedge with lambda>=2 whose minority side
         has few pins can often be closed by replicating ALL minority pins
         at once (single-node moves cannot improve an 8-pin hyperedge)."""
-        e = hg.edges[ei]
-        pin_masks = [int(masks[v]) for v in e]
-        lam = min_cover(pin_masks, P)
-        if lam < 2:
+        if st.lambda_of(ei) < 2:
             return False
+        e = pins[xpins[ei]:xpins[ei + 1]]
         # try to cover the edge with each single processor
         best = None
         for p in range(P):
-            movers = [v for v in e if not (int(masks[v]) >> p) & 1]
+            movers = [int(v) for v in e if not (int(st.masks[v]) >> p) & 1]
             if not movers:
                 continue
             if max_replicas is not None and any(
-                    bin(int(masks[v])).count("1") >= max_replicas
+                    bin(int(st.masks[v])).count("1") >= max_replicas
                     for v in movers):
                 continue
             w = sum(hg.omega[v] for v in movers)
-            if load[p] + w > cap:
+            if st.loads[p] + w > cap:
                 continue
             if best is None or len(movers) < len(best[1]):
-                best = (p, movers, w)
+                best = (p, movers)
         if best is None:
             return False
-        p, movers, w = best
-        touched = sorted({e2 for v in movers for e2 in inc[v]})
-        before = sum(edge_cost(hg, masks, e2, P) for e2 in touched)
-        old = [int(masks[v]) for v in movers]
+        p, movers = best
+        delta = 0.0
         for v in movers:
-            masks[v] = int(masks[v]) | (1 << p)
-        after = sum(edge_cost(hg, masks, e2, P) for e2 in touched)
-        if after < before - 1e-12:
-            load[p] += w
+            delta += st.apply(v, int(st.masks[v]) | (1 << p))
+        if delta < -1e-12:
+            st.commit()
             return True
-        for v, m_old in zip(movers, old):
-            masks[v] = m_old
+        st.undo(len(movers))
         return False
 
     for _ in range(max_passes):
@@ -189,43 +182,36 @@ def replicate_local_search(
             if try_edge_move(int(ei)):
                 improved = True
         for v in rng.permutation(hg.n):
-            m = int(masks[v])
+            m = int(st.masks[v])
             k = bin(m).count("1")
-            base = incident_cost(v)
             # --- try adding a replica ---
             if max_replicas is None or k < max_replicas:
-                best_gain, best_p = 0.0, -1
-                for p in range(P):
-                    if (m >> p) & 1 or load[p] + hg.omega[v] > cap:
+                adds = [p for p in range(P)
+                        if not (m >> p) & 1 and st.fits(v, p, cap)]
+                if adds:
+                    deltas = st.delta_masks(
+                        v, np.array([m | (1 << p) for p in adds]))
+                    best = int(np.argmin(deltas))
+                    if deltas[best] < -1e-12:
+                        st.apply(v, m | (1 << adds[best]))
+                        st.commit()
+                        improved = True
                         continue
-                    masks[v] = m | (1 << p)
-                    gain = base - incident_cost(v)
-                    masks[v] = m
-                    if gain > best_gain + 1e-12:
-                        best_gain, best_p = gain, p
-                if best_p >= 0:
-                    masks[v] = m | (1 << best_p)
-                    load[best_p] += hg.omega[v]
-                    improved = True
-                    continue
             # --- try dropping a replica (free the balance slack) ---
             if k > 1:
                 for p in range(P):
+                    m = int(st.masks[v])
                     if bin(m).count("1") <= 1:
                         break
                     if not (m >> p) & 1:
                         continue
-                    masks[v] = m & ~(1 << p)
-                    if incident_cost(v) <= base + 1e-12:
-                        load[p] -= hg.omega[v]
+                    if st.delta_drop_replica(v, p) <= 1e-12:
+                        st.apply(v, m & ~(1 << p))
+                        st.commit()
                         improved = True
-                        m = int(masks[v])
-                        base = incident_cost(v)
-                    else:
-                        masks[v] = m
         if not improved:
             break
-    return HeuristicResult(masks=masks, cost=partition_cost(hg, masks, P))
+    return HeuristicResult(masks=st.masks.copy(), cost=float(st.cost))
 
 
 def partition_with_replication(
@@ -245,7 +231,7 @@ def partition_with_replication(
     """
     from .exact import exact_partition
 
-    if hg.n <= exact_node_limit:
+    if hg.n <= exact_node_limit and P <= _MAX_P:
         base = exact_partition(hg, P, eps, mode="none", time_limit=time_limit)
         rep = exact_partition(hg, P, eps, mode=mode, time_limit=time_limit,
                               ub_masks=base.masks)
@@ -257,12 +243,16 @@ def partition_with_replication(
     # jointly; two-phase search alone gets stuck, cf. §C.1.1)
     best = replicate_local_search(hg, base.masks.copy(), P, eps,
                                   max_replicas=max_replicas, seed=seed)
+    if P > _MAX_P:
+        from .reference import fm_refine_reference as _refine
+    else:
+        _refine = _fm_refine
     for r in range(3):
         masks = best.masks.copy()
         # re-run FM treating each node's first replica as its home
         primary = np.array([1 << (int(m).bit_length() - 1) for m in masks])
-        moved = _fm_refine(hg, primary.copy(), P, eps,
-                           np.random.default_rng(seed + r + 1))
+        moved = _refine(hg, primary.copy(), P, eps,
+                        np.random.default_rng(seed + r + 1))
         cand = replicate_local_search(hg, moved, P, eps,
                                       max_replicas=max_replicas,
                                       seed=seed + r + 1)
