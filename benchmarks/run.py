@@ -83,6 +83,23 @@ def main() -> None:
         _emit(f"schedule_table13_{sc}", sched["seconds"],
               f"n={v['n_range']};advanced={v['advanced_pct']:.2f}%")
 
+    # ---- schedule-engine perf trajectory (machine-readable) --------------
+    # BENCH_schedule.json at the repo root: old-vs-new heuristic throughput
+    # at scale plus the cost-reduction trajectory -- future PRs diff this.
+    sched_bench = {
+        "engine_scale": sched["engine"],
+        "cost_reduction": sched["table2"],
+    }
+    (pathlib.Path(__file__).resolve().parents[1]
+     / "BENCH_schedule.json").write_text(json.dumps(sched_bench, indent=1))
+    for row in sched["engine"]:
+        _emit(f"schedule_engine_{row['name']}",
+              row["engine_advanced_seconds"],
+              f"speedup_advanced={row['speedup_advanced']:.1f}x;"
+              f"speedup_baseline={row['speedup_baseline']:.1f}x;"
+              f"cost={row['advanced_cost']:.0f};"
+              f"costs_match={row['costs_match']}")
+
     # ---- exact vs heuristic (paper §C.2.2) -------------------------------
     ex = ilp_vs_heuristic.run_all()
     (RESULTS / "ilp_vs_heuristic.json").write_text(json.dumps(ex, indent=1))

@@ -1,4 +1,5 @@
-from .bsp import BspInstance, Schedule
+from .bsp import EPS, BspInstance, Schedule
+from .engine import ScheduleState
 from .exact import ExactScheduleResult, exact_schedule
 from .list_sched import (baseline_schedule, bspg_schedule, derive_comms,
                          hill_climb, rebalance_comms)
@@ -8,7 +9,8 @@ from .replication import (AdvancedOptions, advanced_heuristic,
                           superstep_merge_pass, superstep_replication_pass)
 
 __all__ = [
-    "BspInstance", "Schedule", "ExactScheduleResult", "exact_schedule",
+    "EPS", "BspInstance", "Schedule", "ScheduleState",
+    "ExactScheduleResult", "exact_schedule",
     "baseline_schedule", "bspg_schedule", "derive_comms", "hill_climb",
     "rebalance_comms", "AdvancedOptions", "advanced_heuristic",
     "basic_heuristic", "batch_replication_pass", "best_replicated_schedule",

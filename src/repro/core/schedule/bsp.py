@@ -15,18 +15,22 @@ Cost (with node compute weights ``omega`` and communication weights ``mu``):
 The synchronization cost L is charged only for supersteps with a non-empty
 communication phase (matching the paper's Appendix A.1 accounting, where a
 communication-free single-superstep schedule costs exactly its work).
+
+``Schedule`` is the incremental-delta engine (``engine.ScheduleState``,
+which maintains per-superstep top-2 load maxima, cached superstep costs and
+an undo log for transactional trial moves) plus validity checking and
+reporting.  The seed's full-recompute implementation survives verbatim in
+``reference.py`` as the equivalence oracle.  ``EPS`` is the single shared
+cost-comparison tolerance for the whole scheduling stack.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from collections import defaultdict
-
-import numpy as np
 
 from ..hypergraph import Dag
+from .engine import EPS, INF, ScheduleState
 
-INF = math.inf
+__all__ = ["BspInstance", "Schedule", "EPS", "INF"]
 
 
 @dataclasses.dataclass
@@ -37,109 +41,8 @@ class BspInstance:
     L: float = 0.0
 
 
-class Schedule:
-    def __init__(self, inst: BspInstance, S: int):
-        self.inst = inst
-        P = inst.P
-        self.S = S
-        self.comp: list[list[set[int]]] = [[set() for _ in range(P)] for _ in range(S)]
-        # (v, dst) -> (src, superstep)
-        self.comms: dict[tuple[int, int], tuple[int, int]] = {}
-        # (v, src) -> set of dsts, for O(deg) use queries
-        self.src_index: dict[tuple[int, int], set[int]] = defaultdict(set)
-        # v -> {p: superstep computed}  (at most one superstep per (v,p))
-        self.assign: list[dict[int, int]] = [dict() for _ in range(inst.dag.n)]
-        self.work = np.zeros((S, P))
-        self.sent = np.zeros((S, P))
-        self.recv = np.zeros((S, P))
-        self._cost_arr = np.zeros(S)
-        self._total = 0.0
-        self._dirty: set[int] = set()
-
-    # ------------------------------------------------------------- mutation
-    def _grow(self, s: int) -> None:
-        while s >= self.S:
-            self.comp.append([set() for _ in range(self.inst.P)])
-            self.work = np.vstack([self.work, np.zeros((1, self.inst.P))])
-            self.sent = np.vstack([self.sent, np.zeros((1, self.inst.P))])
-            self.recv = np.vstack([self.recv, np.zeros((1, self.inst.P))])
-            self._cost_arr = np.append(self._cost_arr, 0.0)
-            self.S += 1
-
-    def add_comp(self, v: int, p: int, s: int) -> None:
-        self._grow(s)
-        assert p not in self.assign[v], f"node {v} already on proc {p}"
-        self.comp[s][p].add(v)
-        self.assign[v][p] = s
-        self.work[s, p] += self.inst.dag.omega[v]
-        self._dirty.add(s)
-
-    def remove_comp(self, v: int, p: int) -> None:
-        s = self.assign[v].pop(p)
-        self.comp[s][p].discard(v)
-        self.work[s, p] -= self.inst.dag.omega[v]
-        self._dirty.add(s)
-
-    def add_comm(self, v: int, src: int, dst: int, s: int) -> None:
-        self._grow(s)
-        assert (v, dst) not in self.comms
-        self.comms[(v, dst)] = (src, s)
-        self.src_index[(v, src)].add(dst)
-        mu = self.inst.dag.mu[v]
-        self.sent[s, src] += mu
-        self.recv[s, dst] += mu
-        self._dirty.add(s)
-
-    def remove_comm(self, v: int, dst: int) -> None:
-        src, s = self.comms.pop((v, dst))
-        self.src_index[(v, src)].discard(dst)
-        mu = self.inst.dag.mu[v]
-        self.sent[s, src] -= mu
-        self.recv[s, dst] -= mu
-        self._dirty.add(s)
-
-    def move_comm(self, v: int, dst: int, new_s: int) -> None:
-        src, _ = self.comms[(v, dst)]
-        self.remove_comm(v, dst)
-        self.add_comm(v, src, dst, new_s)
-
-    # ------------------------------------------------------------- presence
-    def compute_sstep(self, v: int, p: int) -> float:
-        return self.assign[v].get(p, INF)
-
-    def recv_sstep(self, v: int, p: int) -> float:
-        c = self.comms.get((v, p))
-        return c[1] if c is not None else INF
-
-    def present_at(self, v: int, p: int, s: int) -> bool:
-        """Usable on p in superstep s (for compute or as a send source)."""
-        return self.compute_sstep(v, p) <= s or self.recv_sstep(v, p) < s
-
-    # ----------------------------------------------------------------- cost
-    def superstep_cost(self, s: int) -> float:
-        c = float(self.work[s].max())
-        h = max(self.sent[s].max(), self.recv[s].max())
-        if h > 1e-12:
-            c += self.inst.L + self.inst.g * h
-        return c
-
-    def cost(self) -> float:
-        return sum(self.superstep_cost(s) for s in range(self.S))
-
-    def surplus_cost(self) -> float:
-        """Paper Definition 4.4: BSP cost minus the unavoidable n/P (or
-        omega(V)/P with weights) compute floor -- captures exactly the
-        extra cost of communication and replication."""
-        return self.cost() - float(self.inst.dag.omega.sum()) / self.inst.P
-
-    def current_cost(self) -> float:
-        """Incrementally maintained total cost (O(dirty supersteps))."""
-        for s in self._dirty:
-            c = self.superstep_cost(s)
-            self._total += c - self._cost_arr[s]
-            self._cost_arr[s] = c
-        self._dirty.clear()
-        return self._total
+class Schedule(ScheduleState):
+    """BSP schedule (engine-backed).  See module docstring for semantics."""
 
     # ------------------------------------------------------------- validity
     def validate(self) -> list[str]:
@@ -164,83 +67,12 @@ class Schedule:
                 errors.append(f"comm ({v},{src}->{dst}) self-send")
         return errors
 
-    # ------------------------------------------------------ use / windows
-    def uses_on(self, v: int, p: int) -> list[int]:
-        """Supersteps where v's value is consumed on p (compute or send)."""
-        out = []
-        for c in self.inst.dag.children[v]:
-            s = self.assign[c].get(p)
-            if s is not None:
-                out.append(s)
-        for dst in self.src_index.get((v, p), ()):
-            out.append(self.comms[(v, dst)][1])
-        return sorted(out)
-
-    def first_use_on(self, v: int, p: int) -> float:
-        u = self.uses_on(v, p)
-        return u[0] if u else INF
-
-    def earliest_replication(self, v: int, p: int) -> float:
-        """First superstep where all parents of v are present on p."""
-        e = 0
-        for u in self.inst.dag.parents[v]:
-            cs = self.compute_sstep(u, p)
-            rs = self.recv_sstep(u, p)
-            e = max(e, min(cs, rs + 1))
-        return e
-
-    # -------------------------------------------------------------- cleanup
-    def prune_useless_comms(self) -> int:
-        """Drop comms whose value is never used on the destination after
-        arrival (can appear after replication rewrites)."""
-        drop = []
-        for (v, dst), (src, s) in self.comms.items():
-            cs = self.compute_sstep(v, dst)
-            # a use at superstep t is satisfied by this comm iff s < t, and
-            # does not need it at all when covered by local compute (cs <= t)
-            needed = any(t > s and not cs <= t for t in self.uses_on(v, dst))
-            if not needed:
-                drop.append((v, dst))
-        for key in drop:
-            self.remove_comm(*key)
-        return len(drop)
-
-    def compact(self) -> None:
-        """Remove empty supersteps (no compute and no comm anywhere)."""
-        keep = [s for s in range(self.S)
-                if self.work[s].any() or self.sent[s].any() or self.recv[s].any()
-                or any(self.comp[s][p] for p in range(self.inst.P))]
-        remap = {old: new for new, old in enumerate(keep)}
-        self.comp = [self.comp[s] for s in keep]
-        self.work = self.work[keep]
-        self.sent = self.sent[keep]
-        self.recv = self.recv[keep]
-        self.S = len(keep)
-        self._cost_arr = np.array([self.superstep_cost(s) for s in range(self.S)])
-        self._total = float(self._cost_arr.sum())
-        self._dirty = set()
-        for v in range(self.inst.dag.n):
-            self.assign[v] = {p: remap[s] for p, s in self.assign[v].items()}
-        self.comms = {k: (src, remap[s]) for k, (src, s) in self.comms.items()}
-
-    def copy(self) -> "Schedule":
-        other = Schedule.__new__(Schedule)
-        other.inst = self.inst
-        other.S = self.S
-        other.comp = [[set(ps) for ps in row] for row in self.comp]
-        other.comms = dict(self.comms)
-        other.src_index = defaultdict(set)
-        for k, dsts in self.src_index.items():
-            if dsts:
-                other.src_index[k] = set(dsts)
-        other.assign = [dict(a) for a in self.assign]
-        other.work = self.work.copy()
-        other.sent = self.sent.copy()
-        other.recv = self.recv.copy()
-        other._cost_arr = self._cost_arr.copy()
-        other._total = self._total
-        other._dirty = set(self._dirty)
-        return other
+    # ------------------------------------------------------------ reporting
+    def surplus_cost(self) -> float:
+        """Paper Definition 4.4: BSP cost minus the unavoidable n/P (or
+        omega(V)/P with weights) compute floor -- captures exactly the
+        extra cost of communication and replication."""
+        return self.cost() - float(self.inst.dag.omega.sum()) / self.inst.P
 
     def stats(self) -> dict:
         return {

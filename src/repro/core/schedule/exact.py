@@ -14,6 +14,14 @@ phase placement is a (very tight in practice) upper bound.  For replication
 we take the exact non-replicating solution as the starting point and apply
 the full replication machinery, mirroring the paper's suggestion (§C.1.1)
 of warm-starting the replicating ILP with the non-replicating optimum.
+
+The bound evaluation is incremental, in the spirit of the schedule engine:
+instead of re-reducing the whole (S, P) work matrix at every search node
+(O(S*P) per expansion), the DFS maintains each superstep's work maximum and
+their running sum with O(1) updates on assign/unassign -- the same
+undo-on-backtrack discipline the partition engine uses for its B&B, and the
+leaf evaluation (derive + rebalance + prune + compact) runs on the
+engine-backed ``Schedule``.
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ import time
 
 import numpy as np
 
-from .bsp import BspInstance, Schedule
+from .bsp import EPS, BspInstance, Schedule
 from .list_sched import derive_comms, rebalance_comms
 
 
@@ -49,7 +57,10 @@ def exact_schedule(inst: BspInstance, max_supersteps: int = 4,
 
     assign_p = np.full(n, -1, dtype=np.int64)
     assign_s = np.full(n, -1, dtype=np.int64)
-    work = np.zeros((max_supersteps, P))
+    work = [[0.0] * P for _ in range(max_supersteps)]
+    # incremental work lower bound: per-superstep max + running sum
+    step_max = [0.0] * max_supersteps
+    state = {"work_lb": 0.0}
     # crude comm lower bound: each cross-processor edge costs >= g * mu / P
     # (it contributes mu to someone's sent and recv h-relation)
 
@@ -62,14 +73,13 @@ def exact_schedule(inst: BspInstance, max_supersteps: int = 4,
         sched.prune_useless_comms()
         sched.compact()
         c = sched.current_cost()
-        if c < best["cost"] - 1e-12:
+        if c < best["cost"] - EPS:
             best["cost"] = c
             best["sched"] = sched
 
-    def lb_partial(idx: int, cross_mu: float) -> float:
-        work_lb = float(work.max(axis=1).sum())
+    def lb_partial(cross_mu: float) -> float:
         comm_lb = inst.g * cross_mu / P + (inst.L if cross_mu > 0 else 0.0)
-        return work_lb + comm_lb
+        return state["work_lb"] + comm_lb
 
     pos = {v: i for i, v in enumerate(topo)}
     parent_positions = [[pos[u] for u in dag.parents[v]] for v in topo]
@@ -85,6 +95,7 @@ def exact_schedule(inst: BspInstance, max_supersteps: int = 4,
             finish()
             return
         v = topo[idx]
+        omega_v = float(dag.omega[v])
         pidx = parent_positions[idx]
         min_s = 0
         for pi in pidx:
@@ -104,14 +115,24 @@ def exact_schedule(inst: BspInstance, max_supersteps: int = 4,
                     continue
                 assign_p[idx] = p
                 assign_s[idx] = s
-                work[s, p] += dag.omega[v]
-                if lb_partial(idx, cross_mu + add_mu) < best["cost"] - 1e-12:
+                old_w = work[s][p]
+                new_w = old_w + omega_v
+                work[s][p] = new_w
+                old_max = step_max[s]
+                old_lb = state["work_lb"]
+                if new_w > old_max:
+                    step_max[s] = new_w
+                    state["work_lb"] = old_lb + (new_w - old_max)
+                if lb_partial(cross_mu + add_mu) < best["cost"] - EPS:
                     dfs2(idx + 1, max(used_procs, p + 1), cross_mu + add_mu)
-                work[s, p] -= dag.omega[v]
+                work[s][p] = old_w
+                step_max[s] = old_max
+                state["work_lb"] = old_lb
                 assign_p[idx] = -1
                 assign_s[idx] = -1
                 if best["timed_out"]:
                     return
+        return
 
     dfs2(0, 0, 0.0)
     return ExactScheduleResult(

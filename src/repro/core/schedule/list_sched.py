@@ -12,13 +12,20 @@ and placed at the latest valid superstep (first use - 1).
   * comm re-placement within its valid window (h-relation balancing),
   * node moves to a different processor in the same superstep,
   * superstep merging when feasible *without* replication.
+
+All moves are priced through the incremental-delta engine: comm
+re-placement and node moves use the pure ``delta_move_comm`` /
+``delta_node_move`` (no mutate-and-revert), and the no-replication merge
+runs inside a ``begin()``/``rollback()`` transaction.  Tie-breaking is
+deterministic (sorted iteration, ``(superstep, processor)`` keys), matching
+``reference.py`` decision-for-decision.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from ..hypergraph import Dag
-from .bsp import INF, BspInstance, Schedule
+from .bsp import EPS, INF, BspInstance, Schedule
 
 
 def dag_levels(dag: Dag) -> list[int]:
@@ -77,12 +84,12 @@ def derive_comms(sched: Schedule) -> None:
                 key = (u, p)
                 if key not in first_use or s < first_use[key]:
                     first_use[key] = s
-    for (v, p), s_use in first_use.items():
+    for (v, p), s_use in sorted(first_use.items()):
         if sched.compute_sstep(v, p) <= s_use:
             continue  # locally computed in time
         # source: the replica computed earliest
         src, s_src = min(((pp, ss) for pp, ss in sched.assign[v].items()),
-                         key=lambda x: x[1])
+                         key=lambda x: (x[1], x[0]))
         assert s_src < s_use, f"value {v} for proc {p} not producible in time"
         sched.add_comm(v, src, p, s_use - 1)
 
@@ -104,25 +111,20 @@ def rebalance_comms(sched: Schedule, max_passes: int = 4) -> bool:
     improved_any = False
     for _ in range(max_passes):
         improved = False
-        for (v, dst) in list(sched.comms.keys()):
+        for (v, dst) in sorted(sched.comms.keys()):
             src, s = sched.comms[(v, dst)]
             lo, hi = _comm_window(sched, v, dst)
             if hi < lo:
                 continue
-            base = sched.current_cost()
-            best_s, best_c = s, base
+            best_s, best_d = s, 0.0
             for t in range(lo, hi + 1):
                 if t == s:
                     continue
-                sched.move_comm(v, dst, t)
-                c = sched.current_cost()
-                if c < best_c - 1e-12:
-                    best_c, best_s = c, t
-                sched.move_comm(v, dst, s)
-                sched.current_cost()
+                d = sched.delta_move_comm(v, dst, t)
+                if d < best_d - EPS:
+                    best_d, best_s = d, t
             if best_s != s:
                 sched.move_comm(v, dst, best_s)
-                sched.current_cost()
                 improved = improved_any = True
         if not improved:
             break
@@ -141,39 +143,12 @@ def try_node_move(sched: Schedule, v: int, q: int) -> bool:
         if not sched.present_at(u, q, s):
             return False
     # v must not be used on p in superstep s itself (comm can't arrive in time)
-    uses_p = [t for t in sched.uses_on(v, p)]
+    uses_p = sched.uses_on(v, p)
     if uses_p and min(uses_p) <= s:
         return False
-    before = sched.current_cost()
-    log: list = []  # (fn, args) inverse ops
-    # retarget outgoing comms from p to q
-    for dst in list(sched.src_index.get((v, p), ())):
-        _, t = sched.comms[(v, dst)]
-        sched.remove_comm(v, dst)
-        log.append(("add_comm", (v, p, dst, t)))
-        if dst != q:
-            sched.add_comm(v, q, dst, t)
-            log.append(("remove_comm", (v, dst)))
-    # drop incoming comm to q (v becomes local there)
-    if (v, q) in sched.comms:
-        src0, t0 = sched.comms[(v, q)]
-        sched.remove_comm(v, q)
-        log.append(("add_comm", (v, src0, q, t0)))
-    sched.remove_comp(v, p)
-    log.append(("add_comp", (v, p, s)))
-    sched.add_comp(v, q, s)
-    log.append(("remove_comp", (v, q)))
-    # consumers on p now need a comm
-    if uses_p:
-        t_first = min(uses_p)
-        sched.add_comm(v, q, p, t_first - 1)
-        log.append(("remove_comm", (v, p)))
-    after = sched.current_cost()
-    if after < before - 1e-12:
+    if sched.delta_node_move(v, q) < -EPS:
+        sched.apply_node_move(v, q)
         return True
-    for fn, args in reversed(log):
-        getattr(sched, fn)(*args)
-    sched.current_cost()
     return False
 
 
@@ -198,7 +173,7 @@ def try_merge_no_repl(sched: Schedule, s: int) -> bool:
     P = sched.inst.P
     # comms at s whose value is used at s+1 must be movable to s-1
     moves = []
-    for (v, dst), (src, t) in sched.comms.items():
+    for (v, dst), (src, t) in sorted(sched.comms.items()):
         if t != s:
             continue
         uses = [x for x in sched.uses_on(v, dst)
@@ -209,33 +184,22 @@ def try_merge_no_repl(sched: Schedule, s: int) -> bool:
             else:
                 return False  # would need replication
     before = sched.current_cost()
-    log: list = []
+    sched.begin()
     for (v, dst) in moves:
-        _, t = sched.comms[(v, dst)]
         sched.move_comm(v, dst, s - 1)
-        log.append(("move_comm", (v, dst, t)))
     # shift compute s+1 -> s
     for p in range(P):
-        for v in list(sched.comp[s + 1][p]):
+        for v in sorted(sched.comp[s + 1][p]):
             sched.remove_comp(v, p)
             sched.add_comp(v, p, s)
-            log.append(("__move_comp_back", (v, p, s + 1)))
     # shift comms at s+1 -> s
-    for (v, dst), (src, t) in list(sched.comms.items()):
+    for (v, dst), (src, t) in sorted(sched.comms.items()):
         if t == s + 1:
             sched.move_comm(v, dst, s)
-            log.append(("move_comm", (v, dst, s + 1)))
-    after = sched.current_cost()
-    if after < before - 1e-12:
+    if sched.current_cost() < before - EPS:
+        sched.commit()
         return True
-    for fn, args in reversed(log):
-        if fn == "__move_comp_back":
-            v, p, old_s = args
-            sched.remove_comp(v, p)
-            sched.add_comp(v, p, old_s)
-        else:
-            getattr(sched, fn)(*args)
-    sched.current_cost()
+    sched.rollback()
     return False
 
 
@@ -281,6 +245,6 @@ def baseline_schedule(inst: BspInstance, seed: int = 0, hc_rounds: int = 6,
     for r in range(restarts):
         sched = bspg_schedule(inst, seed=seed + r)
         sched = hill_climb(sched, rounds=hc_rounds, seed=seed + r)
-        if sched.current_cost() < best.current_cost() - 1e-12:
+        if sched.current_cost() < best.current_cost() - EPS:
             best = sched
     return best

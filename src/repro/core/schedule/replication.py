@@ -1,4 +1,4 @@
-"""Replication heuristics for BSP schedules (paper §6.2).
+"""Replication heuristics for BSP schedules (paper §6.2), engine-backed.
 
 ``basic_heuristic``     -- §6.2.2: replace single communication steps by a
                            replication whenever that decreases the total cost.
@@ -13,14 +13,22 @@
 All moves are evaluated against the exact BSP cost; only strictly improving
 moves are kept.  Between rounds the schedule is cleaned (useless comms
 pruned, empty supersteps compacted), mirroring the paper's §C.2.1 remark.
+
+The pricing mechanics run on the incremental-delta engine (``engine.py``):
+the basic move is priced by a pure ``delta_replicate_for_comm`` (no
+mutation at all), and the compound BR/SM/SR trials mutate inside a
+``begin()``/``commit()``/``rollback()`` transaction instead of working on a
+throwaway ``Schedule.copy()``.  Decisions are tie-broken deterministically
+(sorted comm/compute iteration, ``(superstep, processor)`` source keys) so
+the search trajectory is identical to the preserved full-recompute oracle
+in ``reference.py`` -- same final costs, O(touched-supersteps) work per
+trial instead of O(n + S*P + comms).
 """
 from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
-from .bsp import INF, Schedule
+from .bsp import EPS, INF, Schedule
 
 
 # ----------------------------------------------------------- basic heuristic
@@ -46,11 +54,11 @@ def _best_replication_sstep(sched: Schedule, v: int, dst: int) -> tuple[int, flo
     w = sched.inst.dag.omega[v]
     best_t, best_inc = None, INF
     for t in range(lo, hi + 1):
-        cur_max = sched.work[t].max()
-        inc = max(0.0, sched.work[t, dst] + w - cur_max)
-        if inc < best_inc - 1e-12:
+        cur_max = sched.work_max(t)
+        inc = max(0.0, sched.work[t][dst] + w - cur_max)
+        if inc < best_inc - EPS:
             best_inc, best_t = inc, t
-        if inc <= 1e-12:
+        if inc <= EPS:
             break  # cannot do better than free
     return (best_t, best_inc) if best_t is not None else None
 
@@ -63,23 +71,17 @@ def try_replicate_for_comm(sched: Schedule, v: int, dst: int) -> bool:
     if cand is None:
         return False
     t, _ = cand
-    src, s_comm = sched.comms[(v, dst)]
-    before = sched.current_cost()
-    sched.remove_comm(v, dst)
-    sched.add_comp(v, dst, t)
-    after = sched.current_cost()
-    if after < before - 1e-12:
+    if sched.delta_replicate_for_comm(v, dst, t) < -EPS:
+        sched.remove_comm(v, dst)
+        sched.add_comp(v, dst, t)
         return True
-    sched.remove_comp(v, dst)
-    sched.add_comm(v, src, dst, s_comm)
-    sched.current_cost()
     return False
 
 
 def basic_heuristic(sched: Schedule, max_passes: int = 50) -> Schedule:
     for _ in range(max_passes):
         improved = False
-        for (v, dst) in list(sched.comms.keys()):
+        for (v, dst) in sorted(sched.comms.keys()):
             if (v, dst) not in sched.comms:
                 continue
             if try_replicate_for_comm(sched, v, dst):
@@ -99,28 +101,27 @@ def batch_replication_pass(sched: Schedule) -> bool:
     improved_any = False
     for s in range(sched.S):
         while True:
-            h = max(sched.sent[s].max(), sched.recv[s].max())
-            if h <= 1e-12:
+            h = sched.h_of(s)
+            if h <= EPS:
                 break
-            comms_at_s = [(v, dst, src) for (v, dst), (src, t) in sched.comms.items()
-                          if t == s]
+            comms_at_s = sorted((v, dst, src)
+                                for (v, dst), (src, t) in sched.comms.items()
+                                if t == s)
             if not comms_at_s:
                 break
             sat = [("sent", p) for p in range(sched.inst.P)
-                   if sched.sent[s, p] >= h - 1e-12] + \
+                   if sched.sent[s][p] >= h - EPS] + \
                   [("recv", p) for p in range(sched.inst.P)
-                   if sched.recv[s, p] >= h - 1e-12]
+                   if sched.recv[s][p] >= h - EPS]
             before = sched.current_cost()
-            log: list = []
-            chosen: set[tuple[int, int]] = set()
+            sched.begin()
+            chosen: dict[tuple[int, int], int] = {}  # (v, dst) -> src
             feasible = True
             for side, p in sat:
                 # already covered by a chosen comm?
                 covered = any((side == "sent" and src == p) or
                               (side == "recv" and dst == p)
-                              for (v, dst) in chosen
-                              for (vv, dd, src) in comms_at_s
-                              if (vv, dd) == (v, dst))
+                              for (v, dst), src in chosen.items())
                 if covered:
                     continue
                 # cheapest replication among comms on this side
@@ -141,19 +142,14 @@ def batch_replication_pass(sched: Schedule) -> bool:
                     feasible = False
                     break
                 v, dst, _, t, src = best
-                s_comm = sched.comms[(v, dst)][1]
                 sched.remove_comm(v, dst)
                 sched.add_comp(v, dst, t)
-                log.append((v, dst, src, s_comm))
-                chosen.add((v, dst))
-            after = sched.current_cost()
-            if feasible and chosen and after < before - 1e-12:
+                chosen[(v, dst)] = src
+            if feasible and chosen and sched.current_cost() < before - EPS:
+                sched.commit()
                 improved_any = True
                 continue  # try to shave the new maximum too
-            for (v, dst, src, s_comm) in reversed(log):
-                sched.remove_comp(v, dst)
-                sched.add_comm(v, src, dst, s_comm)
-            sched.current_cost()
+            sched.rollback()
             break
     return improved_any
 
@@ -163,12 +159,13 @@ def batch_replication_pass(sched: Schedule) -> bool:
 def _ensure_present_for_merge(sched: Schedule, v: int, dst: int, s: int) -> bool:
     """Make value v usable on dst within merged superstep s, replicating
     recursively when the producer sits in superstep s itself (paper SM).
-    Mutates sched; returns False if impossible (caller works on a copy)."""
+    Mutates sched; returns False if impossible (caller rolls back)."""
     if sched.present_at(v, dst, s):
         return True
     cs_any = min(sched.assign[v].values())
     if cs_any <= s - 1 and s - 1 >= 0 and (v, dst) not in sched.comms:
-        src = min(sched.assign[v], key=lambda p: sched.assign[v][p])
+        src = min(sched.assign[v],
+                  key=lambda p: (sched.assign[v][p], p))
         sched.add_comm(v, src, dst, s - 1)
         return True
     # must replicate v on dst at superstep s -> parents must be available too
@@ -181,53 +178,57 @@ def _ensure_present_for_merge(sched: Schedule, v: int, dst: int, s: int) -> bool
     return True
 
 
-def try_merge_with_replication(sched: Schedule, s: int) -> Schedule | None:
-    """Attempt to merge superstep s+1 into s (SM).  Returns the improved
-    schedule copy, or None."""
+def try_merge_with_replication(sched: Schedule, s: int) -> bool:
+    """Attempt to merge superstep s+1 into s (SM), in place under a
+    transaction.  Commits (and compacts) on improvement, rolls back
+    otherwise; returns whether the merge was kept."""
     if s + 1 >= sched.S:
-        return None
-    trial = sched.copy()
-    P = trial.inst.P
+        return False
+    P = sched.inst.P
+    before = sched.current_cost()
+    sched.begin()
     # handle comms at s whose value is used at s+1
-    for (v, dst), (src, t) in list(trial.comms.items()):
+    for (v, dst), (src, t) in sorted(sched.comms.items()):
         if t != s:
             continue
-        uses = [x for x in trial.uses_on(v, dst)
-                if x > t and not trial.compute_sstep(v, dst) <= x]
+        uses = [x for x in sched.uses_on(v, dst)
+                if x > t and not sched.compute_sstep(v, dst) <= x]
         if not uses or min(uses) > s + 1:
             continue  # stays in merged superstep, delivers for >= s+2
-        if trial.assign[v].get(src, INF) <= s - 1 and s - 1 >= 0:
-            trial.move_comm(v, dst, s - 1)
+        if sched.assign[v].get(src, INF) <= s - 1 and s - 1 >= 0:
+            sched.move_comm(v, dst, s - 1)
             continue
         # replicate v (and recursively its parents) on dst
-        trial.remove_comm(v, dst)
-        if not _ensure_present_for_merge(trial, v, dst, s):
-            return None
+        sched.remove_comm(v, dst)
+        if not _ensure_present_for_merge(sched, v, dst, s):
+            sched.rollback()
+            return False
     # move compute s+1 -> s
     for p in range(P):
-        for v in list(trial.comp[s + 1][p]):
-            trial.remove_comp(v, p)
-            if p in trial.assign[v]:
-                return None  # already replicated there during merge
-            trial.add_comp(v, p, s)
+        for v in sorted(sched.comp[s + 1][p]):
+            sched.remove_comp(v, p)
+            if p in sched.assign[v]:
+                sched.rollback()
+                return False  # already replicated there during merge
+            sched.add_comp(v, p, s)
     # move comms at s+1 -> s
-    for (v, dst), (src, t) in list(trial.comms.items()):
+    for (v, dst), (src, t) in sorted(sched.comms.items()):
         if t == s + 1:
-            trial.move_comm(v, dst, s)
-    trial.prune_useless_comms()
-    if trial.current_cost() < sched.current_cost() - 1e-12:
-        trial.compact()
-        return trial
-    return None
+            sched.move_comm(v, dst, s)
+    sched.prune_useless_comms()
+    if sched.current_cost() < before - EPS:
+        sched.commit()
+        sched.compact()
+        return True
+    sched.rollback()
+    return False
 
 
 def superstep_merge_pass(sched: Schedule) -> tuple[Schedule, bool]:
     improved = False
     s = 0
     while s < sched.S - 1:
-        out = try_merge_with_replication(sched, s)
-        if out is not None:
-            sched = out
+        if try_merge_with_replication(sched, s):
             improved = True
             # stay at the same index: maybe merge further
         else:
@@ -237,39 +238,46 @@ def superstep_merge_pass(sched: Schedule) -> tuple[Schedule, bool]:
 
 # ------------------------------------------------------ superstep replication
 
-def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> Schedule | None:
-    """SR: replicate (the useful part of) V_{p1,s} onto p2."""
-    nodes = [v for v in sched.comp[s][p1]
-             if p2 not in sched.assign[v] and sched.uses_on(v, p2)]
+def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> bool:
+    """SR: replicate (the useful part of) V_{p1,s} onto p2, in place under
+    a transaction.  Returns whether the replication was kept."""
+    nodes = [v for v in sorted(sched.comp[s][p1])
+             if p2 not in sched.assign[v] and sched.has_use_on(v, p2)]
     if not nodes:
-        return None
-    trial = sched.copy()
+        return False
+    node_set = set(nodes)
+    before = sched.current_cost()
+    sched.begin()
     for v in nodes:
         # parents must be present on p2 by superstep s
         ok = True
-        for u in trial.inst.dag.parents[v]:
-            if trial.present_at(u, p2, s):
+        for u in sched.inst.dag.parents[v]:
+            if sched.present_at(u, p2, s):
                 continue
-            if u in nodes and trial.assign[u].get(p1) == s:
+            if u in node_set and sched.assign[u].get(p1) == s:
                 continue  # replicated alongside
-            cs_any = min(trial.assign[u].values())
-            if cs_any <= s - 1 and s - 1 >= 0 and (u, p2) not in trial.comms:
-                src = min(trial.assign[u], key=lambda p: trial.assign[u][p])
-                trial.add_comm(u, src, p2, s - 1)
+            cs_any = min(sched.assign[u].values())
+            if cs_any <= s - 1 and s - 1 >= 0 and (u, p2) not in sched.comms:
+                src = min(sched.assign[u],
+                          key=lambda p: (sched.assign[u][p], p))
+                sched.add_comm(u, src, p2, s - 1)
             else:
                 ok = False
                 break
         if not ok:
-            return None
-        if (v, p2) in trial.comms:
-            cm_s = trial.comms[(v, p2)][1]
+            sched.rollback()
+            return False
+        if (v, p2) in sched.comms:
+            cm_s = sched.comms[(v, p2)][1]
             if cm_s >= s:  # arriving later than the replica -> drop the comm
-                trial.remove_comm(v, p2)
-        trial.add_comp(v, p2, s)
-    trial.prune_useless_comms()
-    if trial.current_cost() < sched.current_cost() - 1e-12:
-        return trial
-    return None
+                sched.remove_comm(v, p2)
+        sched.add_comp(v, p2, s)
+    sched.prune_useless_comms()
+    if sched.current_cost() < before - EPS:
+        sched.commit()
+        return True
+    sched.rollback()
+    return False
 
 
 def superstep_replication_pass(sched: Schedule) -> tuple[Schedule, bool]:
@@ -282,9 +290,7 @@ def superstep_replication_pass(sched: Schedule) -> tuple[Schedule, bool]:
             for p2 in range(P):
                 if p1 == p2:
                     continue
-                out = try_superstep_replication(sched, s, p1, p2)
-                if out is not None:
-                    sched = out
+                if try_superstep_replication(sched, s, p1, p2):
                     improved = done = True
                     break
             if done:
@@ -342,7 +348,7 @@ def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> 
         # interleave the basic move as cleanup (cheap local improvements)
         before = sched.current_cost()
         sched = basic_heuristic(sched, max_passes=5)
-        improved |= sched.current_cost() < before - 1e-12
+        improved |= sched.current_cost() < before - EPS
         if not improved:
             break
     sched.prune_useless_comms()

@@ -1,0 +1,269 @@
+"""Schedule-engine invariants: deltas must equal full recomputation, and
+transactions must round-trip exactly.
+
+The ``ScheduleState`` engine (src/repro/core/schedule/engine.py) maintains
+per-superstep top-2 load maxima, cached superstep costs and an undo log so
+heuristic trial moves are O(touched supersteps).  These tests pin it to
+full recomputation (``cost()`` over the raw rows) and to the preserved seed
+implementation in ``reference.py`` -- the engine-backed heuristics must
+reproduce the oracle's final costs exactly, not just approximately.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hypergraph import Dag
+from repro.core.schedule import (BspInstance, Schedule, advanced_heuristic,
+                                 basic_heuristic, bspg_schedule, exact_schedule,
+                                 hill_climb)
+from repro.core.schedule import reference as ref
+
+
+def random_dag(n, seed, fanin=3, p_edge=0.5, n_src=8, weighted=False):
+    rng = np.random.default_rng(seed)
+    edges = []
+    for v in range(n_src, n):
+        for u in rng.choice(v, size=min(fanin, v), replace=False):
+            if rng.random() < p_edge:
+                edges.append((int(u), v))
+    omega = rng.uniform(0.5, 4.0, size=n) if weighted else None
+    mu = rng.uniform(0.5, 3.0, size=n) if weighted else None
+    return Dag(n=n, edge_list=edges, omega=omega, mu=mu)
+
+
+def random_schedule(inst, rng, S=6):
+    """Structurally legal (not necessarily precedence-valid) schedule --
+    engine cost invariants do not depend on DAG validity."""
+    sched = Schedule(inst, S)
+    for v in range(inst.dag.n):
+        sched.add_comp(v, int(rng.integers(inst.P)), int(rng.integers(S)))
+    for _ in range(inst.dag.n // 2):
+        v = int(rng.integers(inst.dag.n))
+        src = next(iter(sched.assign[v]))
+        dst = int(rng.integers(inst.P))
+        if dst != src and (v, dst) not in sched.comms:
+            sched.add_comm(v, src, dst, int(rng.integers(S)))
+    return sched
+
+
+def snapshot(sched):
+    return (
+        sched.S,
+        [[frozenset(ps) for ps in row] for row in sched.comp],
+        dict(sched.comms),
+        {k: frozenset(v) for k, v in sched.src_index.items() if v},
+        [dict(a) for a in sched.assign],
+        [list(r) for r in sched.work],
+        [list(r) for r in sched.sent],
+        [list(r) for r in sched.recv],
+        list(sched._scost),
+        sched._total,
+    )
+
+
+def _random_op(sched, rng):
+    """One random structurally legal primitive mutation; returns the pure
+    delta that was priced for it (or None if no op was possible)."""
+    P, S = sched.inst.P, sched.S
+    for _ in range(20):
+        kind = int(rng.integers(5))
+        v = int(rng.integers(sched.inst.dag.n))
+        if kind == 0:  # add_comp
+            free = [p for p in range(P) if p not in sched.assign[v]]
+            if not free:
+                continue
+            p, s = int(rng.choice(free)), int(rng.integers(S))
+            d = sched.delta_add_comp(v, p, s)
+            sched.add_comp(v, p, s)
+            return d
+        if kind == 1 and len(sched.assign[v]) > 1:  # remove_comp
+            p = int(rng.choice(list(sched.assign[v])))
+            d = sched.delta_remove_comp(v, p)
+            sched.remove_comp(v, p)
+            return d
+        if kind == 2:  # add_comm
+            if not sched.assign[v]:
+                continue
+            src = int(rng.choice(list(sched.assign[v])))
+            dst = int(rng.integers(P))
+            if dst == src or (v, dst) in sched.comms:
+                continue
+            s = int(rng.integers(S))
+            d = sched.delta_add_comm(v, src, dst, s)
+            sched.add_comm(v, src, dst, s)
+            return d
+        if kind == 3 and sched.comms:  # remove_comm
+            keys = sorted(sched.comms.keys())
+            v, dst = keys[int(rng.integers(len(keys)))]
+            d = sched.delta_remove_comm(v, dst)
+            sched.remove_comm(v, dst)
+            return d
+        if kind == 4 and sched.comms:  # move_comm
+            keys = sorted(sched.comms.keys())
+            v, dst = keys[int(rng.integers(len(keys)))]
+            t = int(rng.integers(S))
+            d = sched.delta_move_comm(v, dst, t)
+            sched.move_comm(v, dst, t)
+            return d
+    return None
+
+
+@given(st.integers(0, 10_000), st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_property_delta_matches_recompute(seed, weighted):
+    """Every pure delta_* must equal the full-recompute cost difference of
+    actually applying the move; the maintained total, step costs and top-2
+    maxima must stay consistent throughout (``check()``)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(12, 40))
+    dag = random_dag(n, seed, weighted=weighted)
+    inst = BspInstance(dag, P=int(rng.integers(2, 6)),
+                       g=float(rng.integers(1, 6)), L=float(rng.integers(0, 25)))
+    sched = random_schedule(inst, rng)
+    assert abs(sched.current_cost() - sched.cost()) < 1e-9
+    for _ in range(40):
+        before = sched.cost()
+        d = _random_op(sched, rng)
+        if d is None:
+            continue
+        after = sched.cost()
+        assert abs((after - before) - d) < 1e-9, "delta != recompute"
+        assert abs(sched.current_cost() - after) < 1e-9, "total drifted"
+    sched.check()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_property_rollback_roundtrip(seed):
+    """begin + random mutations + rollback must restore the entire state
+    bit-for-bit (containers and floats), even with irrational weights and
+    nested frames."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(12, 40))
+    dag = random_dag(n, seed, weighted=True)
+    inst = BspInstance(dag, P=int(rng.integers(2, 6)),
+                       g=float(rng.random() * 5), L=float(rng.random() * 20))
+    sched = random_schedule(inst, rng)
+    snap0 = snapshot(sched)
+    sched.begin()
+    for _ in range(25):
+        _random_op(sched, rng)
+    if rng.random() < 0.5:  # nested frame: commit folds into the outer one
+        sched.begin()
+        for _ in range(10):
+            _random_op(sched, rng)
+        sched.rollback() if rng.random() < 0.5 else sched.commit()
+    sched.rollback()
+    assert snapshot(sched) == snap0
+    sched.check()
+    # committed mutations survive
+    sched.begin()
+    d = _random_op(sched, rng)
+    snap1 = snapshot(sched)
+    sched.commit()
+    assert snapshot(sched) == snap1
+    sched.check()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_property_node_move_delta(seed):
+    """delta_node_move must price exactly what apply_node_move changes."""
+    rng = np.random.default_rng(seed)
+    dag = random_dag(int(rng.integers(20, 60)), seed, weighted=bool(seed % 2))
+    inst = BspInstance(dag, P=int(rng.integers(2, 6)),
+                       g=float(rng.integers(1, 6)), L=float(rng.integers(0, 25)))
+    sched = bspg_schedule(inst, seed=seed)
+    moved = 0
+    for _ in range(30):
+        v = int(rng.integers(dag.n))
+        q = int(rng.integers(inst.P))
+        if len(sched.assign[v]) != 1:
+            continue
+        (p, s), = sched.assign[v].items()
+        if q == p:
+            continue
+        if any(not sched.present_at(u, q, s) for u in dag.parents[v]):
+            continue
+        uses_p = sched.uses_on(v, p)
+        if uses_p and min(uses_p) <= s:
+            continue
+        before = sched.cost()
+        d = sched.delta_node_move(v, q)
+        sched.apply_node_move(v, q)
+        assert abs((sched.cost() - before) - d) < 1e-9
+        assert abs(sched.current_cost() - sched.cost()) < 1e-9
+        moved += 1
+    sched.check()
+    assert not sched.validate()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_property_compact_and_copy_preserve_state(seed):
+    rng = np.random.default_rng(seed)
+    dag = random_dag(int(rng.integers(20, 50)), seed)
+    inst = BspInstance(dag, P=4, g=2.0, L=5.0)
+    sched = random_schedule(inst, rng, S=8)
+    c = sched.cost()
+    cp = sched.copy()
+    cp.check()
+    assert abs(cp.cost() - c) < 1e-9
+    sched.compact()
+    sched.check()
+    assert abs(sched.cost() - c) < 1e-9  # only empty supersteps removed
+    assert abs(cp.cost() - c) < 1e-9     # copy untouched by compact
+
+
+class TestOracleEquivalence:
+    """Engine-backed heuristics vs the preserved seed implementation: same
+    decisions, hence identical final costs (integer weights => exact)."""
+
+    @pytest.mark.parametrize("seed,P,g,L", [
+        (0, 4, 4, 20), (1, 8, 2, 5), (2, 4, 16, 40), (3, 2, 1, 0),
+        (4, 8, 4, 20), (5, 3, 8, 100),
+    ])
+    def test_pipeline_costs_identical(self, seed, P, g, L):
+        dag = random_dag(110 + 10 * seed, seed)
+        inst = BspInstance(dag, P=P, g=float(g), L=float(L))
+        new_hc = hill_climb(bspg_schedule(inst, seed=seed), seed=seed)
+        ref_hc = ref.hill_climb(ref.bspg_schedule(inst, seed=seed), seed=seed)
+        assert new_hc.current_cost() == ref_hc.current_cost()
+        new_b = basic_heuristic(new_hc.copy())
+        ref_b = ref.basic_heuristic(ref_hc.copy())
+        assert new_b.current_cost() == ref_b.current_cost()
+        new_a = advanced_heuristic(new_hc.copy())
+        ref_a = ref.advanced_heuristic(ref_hc.copy())
+        assert new_a.current_cost() == ref_a.current_cost()
+        # same trajectory => same shape, not just same cost
+        assert new_a.S == ref_a.S
+        assert new_a.stats()["replicas"] == ref_a.stats()["replicas"]
+        assert new_a.stats()["comms"] == ref_a.stats()["comms"]
+        assert not new_a.validate()
+
+    def test_dataset_instance_identical(self):
+        from repro.datagen import hdb_dataset
+        dag = hdb_dataset(scale=1)[4]  # CG: deepest structure of the mix
+        inst = BspInstance(dag, P=8, g=4.0, L=20.0)
+        new_a = advanced_heuristic(
+            hill_climb(bspg_schedule(inst, seed=0), seed=0))
+        ref_a = ref.advanced_heuristic(
+            ref.hill_climb(ref.bspg_schedule(inst, seed=0), seed=0))
+        assert new_a.current_cost() == ref_a.current_cost()
+
+    def test_exact_uses_engine_schedule(self):
+        dag = Dag(n=8, edge_list=[(0, 4), (1, 4), (2, 5), (3, 6), (4, 7),
+                                  (5, 7)])
+        inst = BspInstance(dag, P=2, g=3.0, L=4.0)
+        out = exact_schedule(inst, max_supersteps=3, time_limit=20)
+        assert out.assignments_optimal
+        assert isinstance(out.schedule, Schedule)
+        out.schedule.check()
+        assert not out.schedule.validate()
+
+
+def test_eps_shared_constant():
+    """The stack's cost tolerance lives in one place (bsp.EPS)."""
+    from repro.core.schedule import EPS
+    from repro.core.schedule import bsp, engine
+    assert EPS == bsp.EPS == engine.EPS == ref.EPS == 1e-12
