@@ -180,6 +180,71 @@ def bench_engine(P=4, eps=0.05, seed=0):
     return {"scale": rows, "replication_large": large}
 
 
+def bench_frontier(P=4, eps=0.05, seed=0):
+    """Frontier layer old-vs-new at scale (PR 3 tentpole).
+
+    Times ``partition_heuristic`` with the pre-frontier per-node rescan
+    (``frontier="off"``), the batched NumPy front path (default) and the
+    JAX backend (Pallas gain kernel on TPU, jnp fallback elsewhere --
+    included for the record; on CPU device dispatch costs more than the
+    batched reduction saves).  All three are decision-identical, so the
+    only deliverable difference is wall-clock; a cost mismatch is a bug.
+    Also times the end-to-end replication pipeline old-vs-new at the
+    smallest size.
+    """
+    sizes = (2048, 4096, 6000)
+    try:  # the jax rows are optional: the rest of the repo runs numpy-only
+        import jax  # noqa: F401
+        modes = ("off", "numpy", "jax")
+    except ImportError:
+        modes = ("off", "numpy")
+    rows = []
+    for n in sizes:
+        nz = synthetic_sparse_matrix(n, n, seed=seed + n)
+        hg = row_net_hypergraph(nz, n, name=f"spmv_rn_{n}")
+        timings, costs = {}, {}
+        for mode in modes:
+            if mode == "jax":
+                # untimed run first: front sizes are padded per instance
+                # size, so this compiles exactly the jit shapes the timed
+                # run uses (steady-state, not compilation)
+                partition_heuristic(hg, P, eps, seed=seed, frontier="jax")
+            t0 = time.perf_counter()
+            res = partition_heuristic(hg, P, eps, seed=seed, frontier=mode)
+            timings[mode] = time.perf_counter() - t0
+            costs[mode] = float(res.cost)
+        assert len(set(costs.values())) == 1, costs
+        row = {
+            "n": hg.n, "edges": len(hg.edges), "pins": int(hg.num_pins),
+            "P": P, "eps": eps, "cost": costs["numpy"],
+            "seconds_off": timings["off"],
+            "seconds_numpy": timings["numpy"],
+            "speedup_numpy": timings["off"] / timings["numpy"],
+        }
+        if "jax" in timings:
+            row["seconds_jax"] = timings["jax"]
+            row["speedup_jax"] = timings["off"] / timings["jax"]
+        rows.append(row)
+    # end-to-end replication pipeline, old vs new front pricing
+    n = sizes[0]
+    nz = synthetic_sparse_matrix(n, n, seed=seed)
+    hg = row_net_hypergraph(nz, n, name="spmv_rn_rep")
+    t0 = time.perf_counter()
+    base_off, rep_off = partition_with_replication(
+        hg, P, eps, mode="rep", exact_node_limit=0, seed=seed, frontier="off")
+    t_off = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    base_on, rep_on = partition_with_replication(
+        hg, P, eps, mode="rep", exact_node_limit=0, seed=seed)
+    t_on = time.perf_counter() - t0
+    assert rep_off.cost == rep_on.cost and base_off.cost == base_on.cost
+    replication = {"n": n, "base_cost": float(base_on.cost),
+                   "rep_cost": float(rep_on.cost),
+                   "seconds_off": t_off, "seconds_numpy": t_on,
+                   "speedup_numpy": t_off / t_on}
+    return {"scale": rows, "replication": replication}
+
+
 def run_all():
     t0 = time.time()
     results = {}
@@ -188,6 +253,7 @@ def run_all():
     results["table1"] = table1_eps_sweep()
     results["forms"] = table_forms()
     results["engine"] = bench_engine()
+    results["frontier"] = bench_frontier()
     results["seconds"] = time.time() - t0
     return results
 

@@ -50,6 +50,8 @@ def main() -> None:
     bench = {
         "engine_scale": part["engine"]["scale"],
         "replication_large": part["engine"]["replication_large"],
+        "frontier_scale": part["frontier"]["scale"],
+        "frontier_replication": part["frontier"]["replication"],
         "datasets": {
             ds: {"instances_per_sec": row["instances_per_sec"],
                  "best_cost": min((r for _, r in row["pairs"]), default=0.0)}
@@ -64,6 +66,16 @@ def main() -> None:
         _emit(f"partition_engine_n{row['n']}", row["engine_seconds"],
               f"inst_per_sec={row['engine_instances_per_sec']:.2f};"
               f"cost={row['engine_cost']:.0f}" + spd)
+    for row in part["frontier"]["scale"]:
+        jx = (f"speedup_jax={row['speedup_jax']:.2f}x;"
+              if "speedup_jax" in row else "")
+        _emit(f"partition_frontier_n{row['n']}", row["seconds_numpy"],
+              f"speedup_numpy={row['speedup_numpy']:.2f}x;" + jx
+              + f"cost={row['cost']:.0f}")
+    frep = part["frontier"]["replication"]
+    _emit(f"partition_frontier_rep_n{frep['n']}", frep["seconds_numpy"],
+          f"speedup_numpy={frep['speedup_numpy']:.2f}x;"
+          f"rep_cost={frep['rep_cost']:.0f}")
 
     # ---- scheduling (paper Tables 2, 3, 4) -------------------------------
     sched = scheduling.run_all()
@@ -88,6 +100,7 @@ def main() -> None:
     # at scale plus the cost-reduction trajectory -- future PRs diff this.
     sched_bench = {
         "engine_scale": sched["engine"],
+        "frontier_scale": sched["frontier"],
         "cost_reduction": sched["table2"],
     }
     (pathlib.Path(__file__).resolve().parents[1]
@@ -99,6 +112,12 @@ def main() -> None:
               f"speedup_baseline={row['speedup_baseline']:.1f}x;"
               f"cost={row['advanced_cost']:.0f};"
               f"costs_match={row['costs_match']}")
+    for row in sched["frontier"]:
+        _emit(f"schedule_frontier_{row['name']}",
+              row["advanced_seconds_front"],
+              f"hc_speedup={row['hill_climb_speedup']:.2f}x;"
+              f"adv_speedup={row['advanced_speedup']:.2f}x;"
+              f"adv_cost={row['advanced_cost_front']:.0f}")
 
     # ---- exact vs heuristic (paper §C.2.2) -------------------------------
     ex = ilp_vs_heuristic.run_all()

@@ -187,6 +187,52 @@ def engine_scale(P=8, g=4, L=20):
     return rows
 
 
+def frontier_scale(P=8, g=4, L=20):
+    """Frontier layer old-vs-new on the scheduling stack (PR 3 tentpole).
+
+    Per instance: the hill climber with node moves priced per-target
+    (``use_fronts=False``, the pre-frontier loop) vs one batched front per
+    node, and the advanced heuristic with the first-improvement SR sweep
+    vs the frontier SR pass (whole ``(p1, p2)`` front priced purely, only
+    the winner committed through a transaction).  The hill-climb pair is
+    decision-identical (costs must match); the SR pair deliberately
+    differs in decision rule, so both costs are recorded.
+    """
+    instances = [
+        ("sptrsv_6000", sptrsv_dag(n=6000, band=48, seed=0)),
+        ("sptrsv_3000", sptrsv_dag(n=3000, band=32, seed=0)),
+        ("psdd_2035", psdd_dag(n_leaves=500, depth=16, seed=0)),
+    ]
+    rows = []
+    for name, dag in instances:
+        inst = BspInstance(dag, P=P, g=float(g), L=float(L))
+        base = bspg_schedule(inst, seed=0)
+        t0 = time.perf_counter()
+        hc_on = hill_climb(base.copy(), seed=0)
+        t1 = time.perf_counter()
+        hc_off = hill_climb(base.copy(), seed=0, use_fronts=False)
+        t2 = time.perf_counter()
+        adv_on = advanced_heuristic(hc_on.copy())
+        t3 = time.perf_counter()
+        adv_off = advanced_heuristic(hc_on.copy(),
+                                     AdvancedOptions(use_fronts=False))
+        t4 = time.perf_counter()
+        assert hc_on.current_cost() == hc_off.current_cost()
+        rows.append({
+            "name": name, "n": dag.n, "P": P,
+            "hill_climb_seconds_front": t1 - t0,
+            "hill_climb_seconds_off": t2 - t1,
+            "hill_climb_speedup": (t2 - t1) / max(t1 - t0, 1e-9),
+            "advanced_seconds_front": t3 - t2,
+            "advanced_seconds_off": t4 - t3,
+            "advanced_speedup": (t4 - t3) / max(t3 - t2, 1e-9),
+            "hill_climb_cost": float(hc_on.current_cost()),
+            "advanced_cost_front": float(adv_on.current_cost()),
+            "advanced_cost_off": float(adv_off.current_cost()),
+        })
+    return rows
+
+
 def run_all():
     t0 = time.time()
     results = {
@@ -195,6 +241,7 @@ def run_all():
         "table4": table4_ablation(),
         "table13": table13_size_consistency(),
         "engine": engine_scale(),
+        "frontier": frontier_scale(),
     }
     results["seconds"] = time.time() - t0
     return results

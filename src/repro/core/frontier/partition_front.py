@@ -1,0 +1,235 @@
+"""Batched gain evaluation for the partition engine (frontier layer).
+
+``price_mask_front`` evaluates a *ragged front* of candidate masks -- node
+``vs[i]`` with candidates ``cands[xcand[i]:xcand[i+1]]`` -- in one
+vectorized pass over the engine's CSR state, returning exactly what
+``PartitionState.delta_masks`` would return per node, bit-for-bit: the
+per-(candidate, edge) cost terms are summed sequentially in edge order
+(``np.bincount``), the same reduction the engine uses, so a front of one
+node and a front of a thousand produce identical floats.
+
+Two interchangeable lambda backends (selected per call or via
+``set_backend``):
+
+  * ``"numpy"`` (default): ``engine._lambda_from_rows`` -- a single
+    argmax over the popcount-ordered subset columns;
+  * ``"jax"``: ``repro.kernels.gain.min_cover_lambdas`` -- the same
+    reduction as a Pallas TPU kernel (jnp fallback off-TPU), dispatched
+    like ``kernels/ops.py``.  Lambdas are small integers, so both
+    backends feed identical values into the (float64, NumPy) cost
+    reduction -- bit-equality holds across backends too.
+
+``GainCache`` sits on top: it memoizes each node's candidate deltas and
+invalidates through the pin-adjacency on every applied move, so FM-style
+passes reprice only nodes whose gain actually changed (output-sensitive)
+and reprice them in batched fronts instead of one engine call per node.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..partition.engine import PartitionState, _lambda_from_rows
+
+_BACKEND = "numpy"
+
+# cap on the (rows x 2^P) scratch of one evaluation chunk (elements);
+# fronts beyond it are split on candidate boundaries, which cannot change
+# any per-candidate sum
+_CHUNK_ELEMS = 4_000_000
+
+# the jax backend only pays for itself on big fronts: below this row count
+# device dispatch dominates and the numpy reduction runs instead (the two
+# produce bit-identical lambdas, so this is a pure scheduling choice)
+_JAX_MIN_ROWS = 4096
+
+
+def set_backend(backend: str) -> None:
+    """Select the default lambda backend: ``"numpy"`` or ``"jax"``."""
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown frontier backend {backend!r}")
+    global _BACKEND
+    _BACKEND = backend
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _ragged_gather(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Flat indices for concatenating ``arr[starts[i]:starts[i]+lens[i]]``."""
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    off = np.repeat(np.cumsum(lens) - lens, lens)
+    return np.repeat(starts, lens) + (np.arange(total, dtype=np.int64) - off)
+
+
+def _lambdas(rows: np.ndarray, state: PartitionState, backend: str) -> np.ndarray:
+    if backend == "jax" and rows.shape[0] >= _JAX_MIN_ROWS:
+        from ...kernels import gain
+        return gain.min_cover_lambdas(rows, state._order, state._order_pc)
+    return _lambda_from_rows(rows, state._order, state._order_pc)
+
+
+def price_mask_front(state: PartitionState, vs: np.ndarray, cands: np.ndarray,
+                     xcand: np.ndarray, backend: str | None = None) -> np.ndarray:
+    """Cost deltas for a ragged candidate front, one vectorized pass.
+
+    ``vs[i]`` gets candidates ``cands[xcand[i]:xcand[i+1]]``; the result is
+    the flat float64 array equal (bit-for-bit) to concatenating
+    ``state.delta_masks(vs[i], cands[xcand[i]:xcand[i+1]])`` per node.
+    Requires the numpy engine backend (the python backend has no uncov
+    matrix to batch over).
+    """
+    if state.backend != "numpy":
+        raise ValueError("price_mask_front needs a numpy-backend PartitionState")
+    backend = backend or _BACKEND
+    vs = np.asarray(vs, dtype=np.int64)
+    cands = np.asarray(cands, dtype=np.int64)
+    xcand = np.asarray(xcand, dtype=np.int64)
+    C = len(cands)
+    out = np.zeros(C, dtype=np.float64)
+    if C == 0 or len(vs) == 0:
+        return out
+    K = np.diff(xcand)                       # candidates per node
+    node_of_pair = np.repeat(np.arange(len(vs), dtype=np.int64), K)
+    deg = state.xinc[vs + 1] - state.xinc[vs]
+    deg_of_pair = deg[node_of_pair]
+    # rows for pair (i, c): uncov[e] + contrib[c] - contrib[old_i], for each
+    # incident edge e of vs[i] -- contiguous per pair, edges in CSR order
+    edge_rep = state.inc_edges[
+        _ragged_gather(state.xinc[vs][node_of_pair], deg_of_pair)]
+    old_rows = np.repeat(state.masks[vs][node_of_pair], deg_of_pair)
+    cand_rows = np.repeat(cands, deg_of_pair)
+    pair_ids = np.repeat(np.arange(C, dtype=np.int64), deg_of_pair)
+    nsub = state._contrib.shape[0]
+    chunk_rows = max(_CHUNK_ELEMS // nsub, 1)
+    R = len(edge_rep)
+    base_lam = np.maximum(state.edge_lambda[edge_rep].astype(np.float64) - 1, 0)
+    lo = 0
+    while lo < R:
+        hi = min(lo + chunk_rows, R)
+        # never split a pair across chunks (the bincount below must see a
+        # pair's terms in one sequential run)
+        while hi < R and pair_ids[hi] == pair_ids[hi - 1]:
+            hi += 1
+        rows = (state.uncov[edge_rep[lo:hi]]
+                + state._contrib[cand_rows[lo:hi]]
+                - state._contrib[old_rows[lo:hi]])
+        lam = _lambdas(rows, state, backend).astype(np.float64)
+        terms = ((np.maximum(lam - 1, 0) - base_lam[lo:hi])
+                 * state.mu[edge_rep[lo:hi]])
+        out += np.bincount(pair_ids[lo:hi], weights=terms, minlength=C)
+        lo = hi
+    return out
+
+
+# --------------------------------------------------------------------------
+# Candidate builders (vectorized): masks per node, ascending processor order
+# --------------------------------------------------------------------------
+
+def move_candidates(state: PartitionState, vs: np.ndarray):
+    """FM move front: for each single-assignment node, masks ``1 << q`` for
+    every q except the current primary, ascending q (the deterministic
+    tie-break order, see ``heuristic._fm_refine``)."""
+    P = state.P
+    vs = np.asarray(vs, dtype=np.int64)
+    prim = np.zeros(len(vs), dtype=np.int64)
+    m = state.masks[vs].copy()
+    while np.any(m > 1):                      # primary = highest set bit
+        gt = m > 1
+        prim[gt] += 1
+        m[gt] >>= 1
+    targets = np.arange(P, dtype=np.int64)
+    keep = targets[None, :] != prim[:, None]
+    cands = np.broadcast_to(np.int64(1) << targets, (len(vs), P))[keep]
+    xcand = np.zeros(len(vs) + 1, dtype=np.int64)
+    np.cumsum(keep.sum(axis=1), out=xcand[1:])
+    return cands, xcand
+
+
+def add_replica_candidates(state: PartitionState, vs: np.ndarray):
+    """Replication front: ``mask | (1 << q)`` for every unset q, ascending
+    q -- the candidate order of ``replicate_local_search``'s add step."""
+    P = state.P
+    vs = np.asarray(vs, dtype=np.int64)
+    m = state.masks[vs]
+    targets = np.arange(P, dtype=np.int64)
+    unset = (m[:, None] >> targets[None, :]) & 1 == 0
+    cands = (m[:, None] | (np.int64(1) << targets)[None, :])[unset]
+    xcand = np.zeros(len(vs) + 1, dtype=np.int64)
+    np.cumsum(unset.sum(axis=1), out=xcand[1:])
+    return cands, xcand
+
+
+class GainCache:
+    """Output-sensitive per-node candidate deltas over a ``PartitionState``.
+
+    ``cands_builder(state, vs) -> (cands, xcand)`` defines the (ordered)
+    candidate rule; ``get(v)`` returns that node's ``(cands, deltas)``
+    exactly as a fresh ``state.delta_masks`` call would produce them.  A
+    node's entry goes stale only when the uncov row of one of its incident
+    edges changes, i.e. when a node sharing a hyperedge with it (or the
+    node itself) is re-assigned -- ``invalidate_move`` marks exactly that
+    pin-adjacency set.  ``refresh_dirty`` reprices every stale node in one
+    batched front, so a full FM pass touches clean nodes for free.
+    """
+
+    def __init__(self, state: PartitionState, cands_builder,
+                 backend: str | None = None) -> None:
+        self.state = state
+        self.cands_builder = cands_builder
+        self.backend = backend
+        n = state.hg.n
+        self._dirty = np.ones(n, dtype=bool)
+        self._cands: list = [None] * n
+        self._deltas: list = [None] * n
+
+    def _refresh(self, vs: np.ndarray) -> None:
+        cands, xcand = self.cands_builder(self.state, vs)
+        deltas = price_mask_front(self.state, vs, cands, xcand,
+                                  backend=self.backend)
+        for i, v in enumerate(vs):
+            lo, hi = xcand[i], xcand[i + 1]
+            self._cands[v] = cands[lo:hi]
+            self._deltas[v] = deltas[lo:hi]
+            self._dirty[v] = False
+
+    def refresh_dirty(self) -> int:
+        """Batch-reprice every stale node; returns how many were stale."""
+        vs = np.flatnonzero(self._dirty)
+        if len(vs):
+            self._refresh(vs)
+        return len(vs)
+
+    def refresh_window(self, vs: np.ndarray) -> None:
+        """Batch-reprice the stale subset of ``vs`` (permutation lookahead).
+
+        Scan loops call this when they reach a stale node, passing the next
+        W entries of their visit order: stale nodes about to be visited are
+        repriced in one front instead of one engine call each.  A node
+        re-dirtied by a later move is simply repriced again at its visit --
+        values returned by ``get`` are always current-state exact.
+        """
+        vs = vs[self._dirty[vs]]
+        if len(vs):
+            self._refresh(vs)
+
+    def get(self, v: int):
+        """(cands, deltas) for node v, repricing lazily if stale."""
+        if self._dirty[v]:
+            self._refresh(np.array([v], dtype=np.int64))
+        return self._cands[v], self._deltas[v]
+
+    def is_dirty(self, v: int) -> bool:
+        return bool(self._dirty[v])
+
+    def invalidate_move(self, v: int) -> None:
+        """Mark v and every node sharing a hyperedge with it stale."""
+        hg = self.state.hg
+        self._dirty[hg.adj_nodes[hg.xadj[v]:hg.xadj[v + 1]]] = True
+        self._dirty[v] = True
+
+    @property
+    def dirty_count(self) -> int:
+        return int(self._dirty.sum())

@@ -1,0 +1,280 @@
+"""Batched candidate-front pricing for the BSP schedule engine.
+
+Two fronts from the scheduling stack's hot loops:
+
+  * **Node moves** (``list_sched.hill_climb``): ``price_node_moves`` prices
+    moving a single-assignment node to *every* processor at once.  The
+    move's cell changes are accumulated into per-superstep (P x P) delta
+    matrices (candidate q x processor) and evaluated against flat
+    per-superstep load rows -- ascending superstep order, full-row maxima
+    -- which reproduces ``ScheduleState.delta_node_move`` bit-for-bit for
+    each q (``tests/test_frontier.py`` pins this).
+
+  * **Superstep replication** (``replication.superstep_replication_pass``):
+    ``sr_front`` enumerates every non-empty ``(p1, p2)`` candidate of a
+    superstep from one flat use/assignment matrix over the superstep's
+    compute phase, and ``price_superstep_replication`` prices a candidate
+    *purely* -- simulating exactly the mutation sequence of the
+    transactional trial (parent comms, dropped comms, replica compute) and
+    folding the cells through ``ScheduleState._delta_cells`` -- so failed
+    candidates never touch the undo log.  Pruning after a commit can only
+    reduce the cost further, so a candidate priced improving is improving.
+
+Both are pure; committing stays with the engine's transaction machinery.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..schedule.engine import EPS, ScheduleState
+
+
+def price_node_moves(sched: ScheduleState, v: int) -> np.ndarray:
+    """Deltas of the compound node move ``v -> q`` for every q at once.
+
+    Requires ``len(sched.assign[v]) == 1``.  Entry q equals
+    ``sched.delta_node_move(v, q)`` bit-for-bit for every ``q != p``
+    (entry p, the current processor, is 0 -- not a move).  Feasibility is
+    ``node_move_targets``'s concern, mirroring the hill climber.
+    """
+    P = sched.inst.P
+    (p, s), = sched.assign[v].items()
+    dag = sched.inst.dag
+    mu, om = dag.mu[v], dag.omega[v]
+    allq = np.arange(P)
+    D: dict[tuple[str, int], np.ndarray] = {}
+
+    def dd(kind: str, t: int) -> np.ndarray:
+        key = (kind, t)
+        if key not in D:
+            D[key] = np.zeros((P, P))
+        return D[key]
+
+    # outgoing comms retarget src p -> q (the one to q itself is dropped);
+    # fill order mirrors ScheduleState._node_move_cells so every (q, proc)
+    # slot accumulates its contributions in the same sequence
+    for dst in sorted(sched.src_index.get((v, p), ())):
+        _, t = sched.comms[(v, dst)]
+        ds = dd("sent", t)
+        ds[:, p] -= mu
+        dd("recv", t)[dst, dst] -= mu
+        keep = allq != dst
+        ds[allq[keep], allq[keep]] += mu
+    # an incoming comm to q is dropped (v becomes local there)
+    for q in range(P):
+        c0 = sched.comms.get((v, q))
+        if c0 is not None and c0[0] != p:
+            src0, t0 = c0
+            dd("sent", t0)[q, src0] -= mu
+            dd("recv", t0)[q, q] -= mu
+    dw = dd("work", s)
+    dw[:, p] -= om
+    dw[allq, allq] += om
+    # consumers left on p get one comm q -> p before their first use
+    uses_p = sched.uses_on(v, p)
+    if uses_p:
+        tf = min(uses_p) - 1
+        dd("sent", tf)[allq, allq] += mu
+        dd("recv", tf)[:, p] += mu
+
+    L, g = sched.inst.L, sched.inst.g
+    zeros = np.zeros((P, P))
+    deltas = np.zeros(P)
+    for t in sorted({t for (_, t) in D}):
+        assert t < sched.S, "node move cannot touch beyond the horizon"
+        w1 = (np.asarray(sched.work[t])
+              + D.get(("work", t), zeros)).max(axis=1)
+        s1 = (np.asarray(sched.sent[t])
+              + D.get(("sent", t), zeros)).max(axis=1)
+        r1 = (np.asarray(sched.recv[t])
+              + D.get(("recv", t), zeros)).max(axis=1)
+        h = np.maximum(s1, r1)
+        deltas += np.where(h > EPS, w1 + L + g * h, w1) - sched._scost[t]
+    deltas[p] = 0.0
+    return deltas
+
+
+def node_move_targets(sched: ScheduleState, v: int) -> list[bool]:
+    """Feasible targets of the hill climber's node move, as P bools.
+
+    Mirrors ``list_sched.try_node_move``'s guards: q must differ from the
+    current processor, every parent must be present on q at v's superstep,
+    and v must not be consumed on its current processor in that superstep
+    (the replacement comm could not arrive in time).  Plain-python with
+    early exits -- this runs once per node per pass, usually to say "no"
+    (numpy dispatch here would dominate the whole pass).
+    """
+    P = sched.inst.P
+    (p, s), = sched.assign[v].items()
+    uses_p = sched.uses_on(v, p)
+    if uses_p and min(uses_p) <= s:
+        return [False] * P
+    feas = [True] * P
+    feas[p] = False
+    alive = P - 1
+    comms = sched.comms
+    for u in sched.inst.dag.parents[v]:
+        assign_u = sched.assign[u]
+        for q in range(P):
+            if not feas[q]:
+                continue
+            ss = assign_u.get(q)
+            if ss is not None and ss <= s:
+                continue
+            c = comms.get((u, q))
+            if c is None or c[1] >= s:
+                feas[q] = False
+                alive -= 1
+        if not alive:
+            break
+    return feas
+
+
+# --------------------------------------------------------------------------
+# Superstep-replication front
+# --------------------------------------------------------------------------
+
+def sr_front(sched: ScheduleState, s: int) -> list[tuple[int, int, list[int]]]:
+    """All non-empty SR candidates ``(p1, p2, nodes)`` of superstep s.
+
+    One flat pass over the superstep's compute phase builds, per node, the
+    processors it is *usable toward* (a child computed there or an onward
+    send from there, minus processors it is already assigned to); the
+    candidate list then reads off as the non-zero (p1, p2) combinations,
+    in the deterministic lexicographic order both search paths share.
+    ``nodes`` reproduces ``try_superstep_replication``'s eligibility
+    filter exactly (sorted members of ``comp[s][p1]`` with a use on p2).
+    """
+    P = sched.inst.P
+    entries: list[int] = []
+    p1_of: list[int] = []
+    for p1 in range(P):
+        for v in sorted(sched.comp[s][p1]):
+            entries.append(v)
+            p1_of.append(p1)
+    if not entries:
+        return []
+    assign = sched.assign
+    children = sched.inst.dag.children
+    src_index = sched.src_index
+    U = np.zeros((len(entries), P), dtype=bool)
+    for i, v in enumerate(entries):
+        row = U[i]
+        for c in children[v]:
+            for pp in assign[c]:
+                row[pp] = True
+        for pp in range(P):
+            if src_index.get((v, pp)):
+                row[pp] = True
+        for pp in assign[v]:
+            row[pp] = False
+    p1_arr = np.asarray(p1_of)
+    front = []
+    for p1 in range(P):
+        idx = np.flatnonzero(p1_arr == p1)
+        if not len(idx):
+            continue
+        nz = U[idx].any(axis=0)
+        for p2 in range(P):
+            if p2 == p1 or not nz[p2]:
+                continue
+            front.append((p1, p2, [entries[i] for i in idx if U[i, p2]]))
+    return front
+
+
+def price_superstep_replication(sched: ScheduleState, s: int, p1: int,
+                                p2: int, nodes: list[int]) -> float | None:
+    """Pure price of replicating ``nodes`` (from ``V_{p1,s}``) onto p2.
+
+    Simulates the exact mutation sequence of the transactional trial --
+    parent comms added at s-1, comms (v, p2) arriving at >= s dropped,
+    replica compute added at (s, p2) -- without touching the schedule, and
+    returns the cost delta *before* ``prune_useless_comms`` (which can
+    only decrease it further, so an improving price implies an improving
+    commit).  Returns None when some parent cannot be made present on p2
+    (the trial would roll back).
+    """
+    dag = sched.inst.dag
+    node_set = set(nodes)
+    cells: list[tuple[str, int, int, float]] = []
+    added_comp: set[int] = set()   # nodes virtually replicated at (p2, s)
+    added_comm: set[int] = set()   # parents virtually comm'd to p2 at s-1
+    for v in nodes:
+        for u in dag.parents[v]:
+            if (u in added_comp or u in added_comm
+                    or sched.present_at(u, p2, s)):
+                continue
+            if u in node_set and sched.assign[u].get(p1) == s:
+                continue  # replicated alongside
+            cs_any = min(sched.assign[u].values())
+            if (cs_any <= s - 1 and s - 1 >= 0
+                    and (u, p2) not in sched.comms):
+                src = min(sched.assign[u],
+                          key=lambda p: (sched.assign[u][p], p))
+                mu = dag.mu[u]
+                cells.append(("sent", s - 1, src, mu))
+                cells.append(("recv", s - 1, p2, mu))
+                added_comm.add(u)
+            else:
+                return None
+        c = sched.comms.get((v, p2))
+        if c is not None and c[1] >= s:  # arrives later than the replica
+            src0, t0 = c
+            mu = dag.mu[v]
+            cells.append(("sent", t0, src0, -mu))
+            cells.append(("recv", t0, p2, -mu))
+        cells.append(("work", s, p2, dag.omega[v]))
+        added_comp.add(v)
+    return sched._delta_cells(cells)
+
+
+def apply_sr_mutations(sched, s: int, p1: int, p2: int,
+                       nodes: list[int]) -> bool:
+    """The SR mutation sequence (no prune): parent comms at s-1, late
+    comms (v, p2) dropped, replica compute added at (s, p2).
+
+    Single home of the sequence, shared by the engine commit below and the
+    ``reference.py`` oracle (it only touches the mutation API the two
+    schedule classes have in common); ``price_superstep_replication``'s
+    pure simulation must mirror it cell-for-cell.  Returns False when some
+    parent cannot be made present (caller rolls back / discards).
+    """
+    node_set = set(nodes)
+    for v in nodes:
+        # parents must be present on p2 by superstep s
+        for u in sched.inst.dag.parents[v]:
+            if sched.present_at(u, p2, s):
+                continue
+            if u in node_set and sched.assign[u].get(p1) == s:
+                continue  # replicated alongside
+            cs_any = min(sched.assign[u].values())
+            if cs_any <= s - 1 and s - 1 >= 0 and (u, p2) not in sched.comms:
+                src = min(sched.assign[u],
+                          key=lambda p: (sched.assign[u][p], p))
+                sched.add_comm(u, src, p2, s - 1)
+            else:
+                return False
+        if (v, p2) in sched.comms and sched.comms[(v, p2)][1] >= s:
+            sched.remove_comm(v, p2)  # arrives later than the replica
+        sched.add_comp(v, p2, s)
+    return True
+
+
+def commit_superstep_replication(sched: ScheduleState, s: int, p1: int,
+                                 p2: int, nodes: list[int]) -> None:
+    """Replay a priced SR winner through the transaction machinery.
+
+    Performs exactly the mutations ``price_superstep_replication``
+    simulated (feasibility was established there), then prunes; a
+    surprise infeasibility or mid-commit failure rolls the transaction
+    back before re-raising, so the schedule is never left corrupted.
+    """
+    sched.begin()
+    try:
+        if not apply_sr_mutations(sched, s, p1, p2, nodes):
+            raise RuntimeError("priced SR became infeasible at commit")
+        sched.prune_useless_comms()
+    except BaseException:
+        sched.rollback()
+        raise
+    sched.commit()

@@ -278,26 +278,19 @@ class PartitionState:
     def delta_masks(self, v: int, new_masks: np.ndarray) -> np.ndarray:
         """Cost change for each candidate mask in ``new_masks`` at once.
 
-        One vectorized pass over a (K, deg, 2^P) tensor -- amortizes numpy
-        call overhead across all K candidates of a node (the inner loop of
-        FM refinement and the add-replica search).
+        Single-node front of the frontier layer's batched evaluator
+        (``core.frontier.price_mask_front``), which amortizes numpy call
+        overhead across all K candidates and -- because the frontier
+        reduction is the single shared implementation -- is bit-equal to
+        pricing the same candidates as part of any larger node front.
         """
         new_masks = np.asarray(new_masks, dtype=np.int64)
         if self.backend == "python":
             return np.array([self._delta_py(v, int(m)) for m in new_masks])
-        old = int(self.masks[v])
-        inc = self._incident(v)
-        if inc.size == 0:
-            return np.zeros(len(new_masks), dtype=np.float64)
-        rows = (self.uncov[inc][None, :, :]
-                + (self._contrib[new_masks]
-                   - self._contrib[old])[:, None, :])
-        K, deg, nsub = rows.shape
-        lam = self._lambda_rows(rows.reshape(K * deg, nsub)) \
-            .astype(np.float64).reshape(K, deg)
-        base = np.maximum(self.edge_lambda[inc].astype(np.float64) - 1, 0)
-        return ((np.maximum(lam - 1, 0) - base[None, :])
-                * self.mu[inc][None, :]).sum(axis=1)
+        from ..frontier.partition_front import price_mask_front
+        return price_mask_front(
+            self, np.array([v], dtype=np.int64), new_masks,
+            np.array([0, len(new_masks)], dtype=np.int64), backend="numpy")
 
     def delta_move(self, v: int, p_from: int, p_to: int) -> float:
         m = int(self.masks[v])

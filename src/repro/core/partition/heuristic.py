@@ -13,8 +13,23 @@ The paper solves instances of 80-500 nodes with a commercial ILP solver and a
 All move evaluation runs on the incremental-gain ``PartitionState`` engine
 (O(degree) per candidate instead of full set-cover recomputation; see
 ``engine.py``), which is what lets the local search reach hundreds-to-
-thousands of nodes.  The seed full-recompute implementation survives in
-``reference.py`` as the equivalence/benchmark oracle.
+thousands of nodes.  On top of it sits the frontier-pricing layer
+(``core.frontier``): a ``GainCache`` holds every node's candidate deltas,
+priced in batched vectorized fronts and invalidated through the
+pin-adjacency, so refinement passes are *output-sensitive* -- only nodes
+whose gain actually changed are repriced, and they are repriced together
+instead of one engine call per node.  Decisions are identical to the
+per-node rescan (kept as ``frontier="off"`` for benchmarking); the seed
+full-recompute implementation survives in ``reference.py`` as the
+equivalence/benchmark oracle.
+
+Tie-breaking rule (shared by every move selection below, and pinned by
+``tests/test_frontier.py``): candidate masks are generated in **ascending
+processor order** and the first minimum wins (``int(np.argmin(...))``
+returns the lowest index), i.e. ties go to the lowest processor id.  Any
+batched backend must reproduce this, which is why the frontier candidate
+builders emit masks in ascending-q order and the front reduction is
+bit-equal to the scalar engine deltas.
 
 This mirrors the paper's observation (§8) that replication comes "for free":
 the per-partition capacity is unchanged, replicas only consume slack.
@@ -22,6 +37,7 @@ the per-partition capacity is unchanged, replicas only consume slack.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 
 import numpy as np
@@ -46,7 +62,12 @@ def _greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator
     order = rng.permutation(hg.n)
     cur_p, cur_w = 0, 0.0
 
+    # in_queue dedupes the multiset pin-adjacency: only a node's *first*
+    # queue occurrence is ever visited, so dropping later duplicates keeps
+    # the BFS order (and hence the partition) bit-identical while cutting
+    # queue traffic from O(sum deg^2) to O(n)
     queue: deque[int] = deque()
+    in_queue = np.zeros(hg.n, dtype=bool)
     qi = 0
     while True:
         if not queue:
@@ -55,6 +76,7 @@ def _greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator
             if qi == hg.n:
                 break
             queue.append(order[qi])
+            in_queue[order[qi]] = True
         v = queue.popleft()
         if visited[v]:
             continue
@@ -65,29 +87,70 @@ def _greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator
         part[v] = cur_p
         cur_w += hg.omega[v]
         nbr = adj[xadj[v]:xadj[v + 1]]
-        queue.extend(nbr[~visited[nbr]].tolist())
+        fresh = nbr[~(visited[nbr] | in_queue[nbr])]
+        if len(fresh):
+            first = np.sort(np.unique(fresh, return_index=True)[1])
+            fresh = fresh[first]
+            in_queue[fresh] = True
+            queue.extend(fresh.tolist())
     return (1 << part).astype(np.int64)
 
 
 def _fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
                rng: np.random.Generator, passes: int = 6,
-               state: PartitionState | None = None) -> np.ndarray:
-    """Move-based refinement (single-assignment masks), engine-backed."""
+               state: PartitionState | None = None,
+               frontier: str | None = None) -> np.ndarray:
+    """Move-based refinement (single-assignment masks), engine-backed.
+
+    Default path: a frontier ``GainCache`` prices the whole node front in
+    one batched call per pass and thereafter only nodes adjacent to an
+    applied move (output-sensitive FM).  ``frontier="off"`` keeps the
+    per-node rescan; both take identical decisions (ties to the lowest
+    processor id, see the module docstring).
+    """
     cap = capacity(hg, P, eps) + 1e-9
     st = state if state is not None else PartitionState(hg, P, masks=masks)
+    if frontier == "off":
+        for _ in range(passes):
+            improved = False
+            for v in rng.permutation(hg.n):
+                p = int(st.masks[v]).bit_length() - 1
+                targets = [q for q in range(P)
+                           if q != p and st.fits(v, q, cap)]
+                if not targets:
+                    continue
+                deltas = st.delta_masks(v, np.array([1 << q for q in targets]))
+                best = int(np.argmin(deltas))
+                if deltas[best] < -1e-12:
+                    st.apply(v, 1 << targets[best])
+                    st.commit()
+                    improved = True
+            if not improved:
+                break
+        masks[:] = st.masks
+        return masks
+    from ..frontier import GainCache, move_candidates
+    cache = GainCache(st, move_candidates, backend=frontier)
     for _ in range(passes):
         improved = False
-        for v in rng.permutation(hg.n):
-            p = int(st.masks[v]).bit_length() - 1
-            targets = [q for q in range(P)
-                       if q != p and st.fits(v, q, cap)]
-            if not targets:
+        cache.refresh_dirty()  # batch-reprice everything a move touched
+        perm = rng.permutation(hg.n)
+        for i, v in enumerate(perm):
+            if cache.is_dirty(v):  # lookahead: reprice the window in one go
+                cache.refresh_window(perm[i:i + 64])
+            cands, deltas = cache.get(v)
+            # capacity filter at decision time (loads move on every apply;
+            # cost deltas do not depend on them) -- ascending q order
+            sel = [j for j in range(len(cands))
+                   if st.fits(v, int(cands[j]).bit_length() - 1, cap)]
+            if not sel:
                 continue
-            deltas = st.delta_masks(v, np.array([1 << q for q in targets]))
-            best = int(np.argmin(deltas))
-            if deltas[best] < -1e-12:
-                st.apply(v, 1 << targets[best])
+            sub = deltas[sel]
+            best = int(np.argmin(sub))  # first minimum: lowest processor id
+            if sub[best] < -1e-12:
+                st.apply(v, int(cands[sel[best]]))
                 st.commit()
+                cache.invalidate_move(v)
                 improved = True
         if not improved:
             break
@@ -96,8 +159,15 @@ def _fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
 
 
 def partition_heuristic(hg: Hypergraph, P: int, eps: float,
-                        restarts: int = 4, seed: int = 0) -> HeuristicResult:
-    """Non-replicating baseline: greedy initial + FM refinement, best of restarts."""
+                        restarts: int = 4, seed: int = 0,
+                        frontier: str | None = None) -> HeuristicResult:
+    """Non-replicating baseline: greedy initial + FM refinement, best of restarts.
+
+    ``frontier`` selects the gain-pricing path: ``None`` (the frontier
+    layer's default backend), ``"numpy"`` / ``"jax"`` explicitly, or
+    ``"off"`` for the pre-frontier per-node rescan -- all decision-
+    identical.
+    """
     if P > _MAX_P:  # beyond the engine's 2^P tables: scalar reference path
         from .reference import partition_heuristic_reference
         masks, cost = partition_heuristic_reference(hg, P, eps,
@@ -109,7 +179,7 @@ def partition_heuristic(hg: Hypergraph, P: int, eps: float,
     for _ in range(restarts):
         masks = _greedy_initial(hg, P, eps, rng)
         st = PartitionState(hg, P, masks=masks)
-        _fm_refine(hg, masks, P, eps, rng, state=st)
+        _fm_refine(hg, masks, P, eps, rng, state=st, frontier=frontier)
         if st.cost < best_cost:
             best_cost, best_masks = st.cost, st.masks.copy()
     return HeuristicResult(masks=best_masks, cost=float(best_cost))
@@ -123,13 +193,17 @@ def replicate_local_search(
     max_replicas: int | None = None,
     max_passes: int = 30,
     seed: int = 0,
+    frontier: str | None = None,
 ) -> HeuristicResult:
     """Add/drop replicas while the (lambda_e - 1) cost decreases.
 
     Starts from any valid assignment (typically the non-replicating optimum
     or heuristic solution, as the paper suggests for warm-starting ILPs in
-    §C.1.1).  Every candidate is priced through the engine's O(degree)
-    delta operations; the multi-pin edge-guided move uses apply/undo.
+    §C.1.1).  Add-replica candidates are priced through the frontier
+    ``GainCache`` (batched, output-sensitive; ``frontier="off"`` keeps the
+    per-node engine rescan -- identical decisions, ties to the lowest
+    processor id); drops and the multi-pin edge-guided move stay on the
+    engine's scalar delta / apply+undo path.
     """
     if P > _MAX_P:  # beyond the engine's 2^P tables: scalar reference path
         from .reference import replicate_local_search_reference
@@ -141,6 +215,10 @@ def replicate_local_search(
     st = PartitionState(hg, P, masks=np.asarray(masks, dtype=np.int64))
     cap = capacity(hg, P, eps) + 1e-9
     xpins, pins = hg.xpins, hg.pins
+    cache = None
+    if frontier != "off":
+        from ..frontier import GainCache, add_replica_candidates
+        cache = GainCache(st, add_replica_candidates, backend=frontier)
 
     def try_edge_move(ei: int) -> bool:
         """Edge-guided move: a hyperedge with lambda>=2 whose minority side
@@ -172,6 +250,9 @@ def replicate_local_search(
             delta += st.apply(v, int(st.masks[v]) | (1 << p))
         if delta < -1e-12:
             st.commit()
+            if cache is not None:
+                for v in movers:
+                    cache.invalidate_move(v)
             return True
         st.undo(len(movers))
         return False
@@ -181,20 +262,38 @@ def replicate_local_search(
         for ei in rng.permutation(len(hg.edges)):
             if try_edge_move(int(ei)):
                 improved = True
-        for v in rng.permutation(hg.n):
+        if cache is not None:
+            cache.refresh_dirty()  # one batched front instead of n calls
+        perm = rng.permutation(hg.n)
+        for i, v in enumerate(perm):
             m = int(st.masks[v])
             k = bin(m).count("1")
             # --- try adding a replica ---
             if max_replicas is None or k < max_replicas:
-                adds = [p for p in range(P)
-                        if not (m >> p) & 1 and st.fits(v, p, cap)]
-                if adds:
-                    deltas = st.delta_masks(
-                        v, np.array([m | (1 << p) for p in adds]))
-                    best = int(np.argmin(deltas))
-                    if deltas[best] < -1e-12:
-                        st.apply(v, m | (1 << adds[best]))
+                if cache is not None:
+                    if cache.is_dirty(v):
+                        cache.refresh_window(perm[i:i + 64])
+                    cands, deltas = cache.get(v)
+                    sel = [j for j in range(len(cands))
+                           if st.fits(v, (int(cands[j]) ^ m).bit_length() - 1,
+                                      cap)]
+                else:
+                    adds = [p for p in range(P)
+                            if not (m >> p) & 1 and st.fits(v, p, cap)]
+                    sel = []
+                    if adds:
+                        cands = np.array([m | (1 << p) for p in adds],
+                                         dtype=np.int64)
+                        deltas = st.delta_masks(v, cands)
+                        sel = list(range(len(adds)))
+                if sel:
+                    sub = deltas[sel]
+                    best = int(np.argmin(sub))  # ties: lowest processor id
+                    if sub[best] < -1e-12:
+                        st.apply(v, int(cands[sel[best]]))
                         st.commit()
+                        if cache is not None:
+                            cache.invalidate_move(v)
                         improved = True
                         continue
             # --- try dropping a replica (free the balance slack) ---
@@ -208,6 +307,8 @@ def replicate_local_search(
                     if st.delta_drop_replica(v, p) <= 1e-12:
                         st.apply(v, m & ~(1 << p))
                         st.commit()
+                        if cache is not None:
+                            cache.invalidate_move(v)
                         improved = True
         if not improved:
             break
@@ -222,6 +323,7 @@ def partition_with_replication(
     exact_node_limit: int = 24,
     time_limit: float | None = 20.0,
     seed: int = 0,
+    frontier: str | None = None,
 ):
     """End-to-end entry: returns (non_repl_result, repl_result).
 
@@ -236,17 +338,18 @@ def partition_with_replication(
         rep = exact_partition(hg, P, eps, mode=mode, time_limit=time_limit,
                               ub_masks=base.masks)
         return base, rep
-    base = partition_heuristic(hg, P, eps, seed=seed)
+    base = partition_heuristic(hg, P, eps, seed=seed, frontier=frontier)
     max_replicas = 2 if mode == "dup" else None
     # alternate replication local search with FM passes on the primary
     # copies (the paper's ILP optimizes base assignment and replicas
     # jointly; two-phase search alone gets stuck, cf. §C.1.1)
     best = replicate_local_search(hg, base.masks.copy(), P, eps,
-                                  max_replicas=max_replicas, seed=seed)
+                                  max_replicas=max_replicas, seed=seed,
+                                  frontier=frontier)
     if P > _MAX_P:
         from .reference import fm_refine_reference as _refine
     else:
-        _refine = _fm_refine
+        _refine = functools.partial(_fm_refine, frontier=frontier)
     for r in range(3):
         masks = best.masks.copy()
         # re-run FM treating each node's first replica as its home
@@ -255,7 +358,8 @@ def partition_with_replication(
                         np.random.default_rng(seed + r + 1))
         cand = replicate_local_search(hg, moved, P, eps,
                                       max_replicas=max_replicas,
-                                      seed=seed + r + 1)
+                                      seed=seed + r + 1,
+                                      frontier=frontier)
         if cand.cost < best.cost - 1e-12:
             best = cand
         else:

@@ -368,13 +368,16 @@ class ScheduleState:
         """Exact total-cost change of applying ``cells`` — an iterable of
         ``(kind, s, p, dv)`` — without mutating anything.  O(touched
         supersteps), O(1) per superstep unless several cells hit the same
-        row (then one O(P) scan)."""
+        row (then one O(P) scan).  Per-superstep deltas are summed in
+        ascending superstep order, so batched pricers (the frontier layer)
+        can reproduce the result bit-for-bit."""
         by_s: dict[int, dict[str, dict[int, float]]] = {}
         for kind, s, p, dv in cells:
             d = by_s.setdefault(s, {}).setdefault(kind, {})
             d[p] = d.get(p, 0.0) + dv
         delta = 0.0
-        for s, kinds in by_s.items():
+        for s in sorted(by_s):
+            kinds = by_s[s]
             if s < self.S:
                 w1 = self._max_with("work", s, kinds.get("work"))
                 s1 = self._max_with("sent", s, kinds.get("sent"))
@@ -472,7 +475,7 @@ class ScheduleState:
         dag = self.inst.dag
         mu, om = dag.mu[v], dag.omega[v]
         cells = []
-        for dst in self.src_index.get((v, p), ()):
+        for dst in sorted(self.src_index.get((v, p), ())):
             _, t = self.comms[(v, dst)]
             cells.append(("sent", t, p, -mu))
             if dst == q:

@@ -14,11 +14,14 @@ and placed at the latest valid superstep (first use - 1).
   * superstep merging when feasible *without* replication.
 
 All moves are priced through the incremental-delta engine: comm
-re-placement and node moves use the pure ``delta_move_comm`` /
-``delta_node_move`` (no mutate-and-revert), and the no-replication merge
-runs inside a ``begin()``/``rollback()`` transaction.  Tie-breaking is
-deterministic (sorted iteration, ``(superstep, processor)`` keys), matching
-``reference.py`` decision-for-decision.
+re-placement uses the pure ``delta_move_comm``, node moves price their
+whole target front at once through the frontier layer
+(``core.frontier.price_node_moves`` -- bit-equal to per-target
+``delta_node_move``, so the first-feasible-improving-q decision is
+unchanged; ``use_fronts=False`` keeps the per-target loop), and the
+no-replication merge runs inside a ``begin()``/``rollback()`` transaction.
+Tie-breaking is deterministic (sorted iteration, ``(superstep, processor)``
+keys), matching ``reference.py`` decision-for-decision.
 """
 from __future__ import annotations
 
@@ -152,15 +155,45 @@ def try_node_move(sched: Schedule, v: int, q: int) -> bool:
     return False
 
 
-def node_move_pass(sched: Schedule, seed: int = 0) -> bool:
+def node_move_pass(sched: Schedule, seed: int = 0,
+                   use_fronts: bool = True) -> bool:
+    """One pass of node moves: first feasible improving target wins.
+
+    Default path prices every target processor in one frontier front
+    (``price_node_moves``); ``use_fronts=False`` keeps the pre-frontier
+    per-target ``try_node_move`` loop.  Both take identical decisions.
+    """
     rng = np.random.default_rng(seed)
     improved = False
     P = sched.inst.P
+    if not use_fronts:
+        for v in rng.permutation(sched.inst.dag.n):
+            if len(sched.assign[v]) != 1:
+                continue
+            for q in range(P):
+                if try_node_move(sched, int(v), q):
+                    improved = True
+                    break
+        return improved
+    from ..frontier import node_move_targets, price_node_moves
     for v in rng.permutation(sched.inst.dag.n):
+        v = int(v)
         if len(sched.assign[v]) != 1:
             continue
+        feas = node_move_targets(sched, v)
+        nq = sum(feas)
+        if nq == 0:
+            continue
+        if nq == 1:  # batching one candidate would just pay numpy dispatch
+            q = feas.index(True)
+            if sched.delta_node_move(v, q) < -EPS:
+                sched.apply_node_move(v, q)
+                improved = True
+            continue
+        deltas = price_node_moves(sched, v)
         for q in range(P):
-            if try_node_move(sched, int(v), q):
+            if feas[q] and deltas[q] < -EPS:
+                sched.apply_node_move(v, q)
                 improved = True
                 break
     return improved
@@ -216,11 +249,13 @@ def merge_pass(sched: Schedule) -> bool:
     return improved
 
 
-def hill_climb(sched: Schedule, rounds: int = 6, seed: int = 0) -> Schedule:
+def hill_climb(sched: Schedule, rounds: int = 6, seed: int = 0,
+               use_fronts: bool = True) -> Schedule:
     for r in range(rounds):
         improved = False
         improved |= rebalance_comms(sched)
-        improved |= node_move_pass(sched, seed=seed + r)
+        improved |= node_move_pass(sched, seed=seed + r,
+                                   use_fronts=use_fronts)
         improved |= merge_pass(sched)
         if not improved:
             break

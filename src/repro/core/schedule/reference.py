@@ -9,12 +9,16 @@ final costs* on the same instances -- ``tests/test_schedule_engine.py`` and
 ``benchmarks/scheduling.py`` hold the two paths together, and the only
 intended difference is wall-clock.
 
-To make that equivalence exact, the one deliberate deviation from the seed
-is deterministic tie-breaking (sorted iteration over comms/compute sets,
-``(superstep, processor)`` keys for source selection); the engine drivers
-apply the same rules, so container iteration order can never split the two
-search trajectories.  With integer-valued weights (all shipped datasets)
-every cost comparison is exact, making the trajectories bit-identical.
+To make that equivalence exact, the deliberate deviations from the seed
+are deterministic tie-breaking (sorted iteration over comms/compute sets,
+``(superstep, processor)`` keys for source selection) and -- since the
+frontier-pricing refactor -- the SR pass's commit-the-winner rule: per
+superstep the whole ``(p1, p2)`` front is priced by its *pre-prune* cost
+delta and the best improving candidate commits (ties to the smallest
+pair).  The engine drivers apply the same rules, so container iteration
+order can never split the two search trajectories.  With integer-valued
+weights (all shipped datasets) every cost comparison is exact, making the
+trajectories bit-identical.
 
 Use as a namespace: ``from repro.core.schedule import reference as ref`` and
 drive ``ref.bspg_schedule`` / ``ref.hill_climb`` / ``ref.basic_heuristic`` /
@@ -28,6 +32,15 @@ from collections import defaultdict
 import numpy as np
 
 from .bsp import EPS, INF, BspInstance  # noqa: F401  (re-exported)
+# The SR mutation sequence is *decision* logic shared verbatim with the
+# engine path -- one home keeps the two trajectories in lockstep (the PR 2
+# contract: same decisions, independent mechanics).  What this oracle
+# still checks independently is everything below the decisions: full-
+# recompute numpy load rows and dirty-set costs vs the engine's top-2 /
+# undo-log bookkeeping.  The SR sequence itself is cross-checked the
+# other way, against the frontier's *pure* cell simulation, by
+# tests/test_frontier.py's pricing-vs-replay property test.
+from ..frontier.schedule_front import apply_sr_mutations
 
 
 class Schedule:
@@ -423,61 +436,52 @@ def superstep_merge_pass(sched: Schedule) -> tuple[Schedule, bool]:
     return sched, improved
 
 
-def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> Schedule | None:
-    """SR: replicate (the useful part of) V_{p1,s} onto p2."""
+def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> float | None:
+    """Price SR (replicate the useful part of V_{p1,s} onto p2) on a copy.
+
+    Returns the pre-prune cost delta (the quantity both search paths rank
+    winners by; pruning after a commit only lowers it further), or None
+    when the candidate is empty or infeasible.
+    """
     nodes = [v for v in sorted(sched.comp[s][p1])
              if p2 not in sched.assign[v] and sched.uses_on(v, p2)]
     if not nodes:
         return None
     trial = sched.copy()
-    for v in nodes:
-        # parents must be present on p2 by superstep s
-        ok = True
-        for u in trial.inst.dag.parents[v]:
-            if trial.present_at(u, p2, s):
-                continue
-            if u in nodes and trial.assign[u].get(p1) == s:
-                continue  # replicated alongside
-            cs_any = min(trial.assign[u].values())
-            if cs_any <= s - 1 and s - 1 >= 0 and (u, p2) not in trial.comms:
-                src = min(trial.assign[u],
-                          key=lambda p: (trial.assign[u][p], p))
-                trial.add_comm(u, src, p2, s - 1)
-            else:
-                ok = False
-                break
-        if not ok:
-            return None
-        if (v, p2) in trial.comms:
-            cm_s = trial.comms[(v, p2)][1]
-            if cm_s >= s:  # arriving later than the replica -> drop the comm
-                trial.remove_comm(v, p2)
-        trial.add_comp(v, p2, s)
-    trial.prune_useless_comms()
-    if trial.current_cost() < sched.current_cost() - EPS:
-        return trial
-    return None
+    if not apply_sr_mutations(trial, s, p1, p2, nodes):
+        return None
+    return trial.current_cost() - sched.current_cost()
 
 
 def superstep_replication_pass(sched: Schedule) -> tuple[Schedule, bool]:
+    """SR sweep, winner rule: per superstep, price the whole (p1, p2) front
+    and commit the best improving candidate (ties to the lexicographically
+    smallest pair), repeating the superstep until dry -- the oracle mirror
+    of the engine path's frontier-based pass."""
     improved = False
     P = sched.inst.P
     s = 0
     while s < sched.S:
-        done = False
+        best = None
         for p1 in range(P):
             for p2 in range(P):
                 if p1 == p2:
                     continue
-                out = try_superstep_replication(sched, s, p1, p2)
-                if out is not None:
-                    sched = out
-                    improved = done = True
-                    break
-            if done:
-                break
-        if not done:
+                priced = try_superstep_replication(sched, s, p1, p2)
+                if priced is not None and priced < -EPS:
+                    if best is None or priced < best[0]:
+                        best = (priced, p1, p2)
+        if best is None:
             s += 1
+            continue
+        _, p1, p2 = best
+        nodes = [v for v in sorted(sched.comp[s][p1])
+                 if p2 not in sched.assign[v] and sched.uses_on(v, p2)]
+        ok = apply_sr_mutations(sched, s, p1, p2, nodes)
+        assert ok, "priced SR became infeasible"
+        sched.prune_useless_comms()
+        sched.current_cost()
+        improved = True
     return sched, improved
 
 

@@ -16,13 +16,18 @@ pruned, empty supersteps compacted), mirroring the paper's §C.2.1 remark.
 
 The pricing mechanics run on the incremental-delta engine (``engine.py``):
 the basic move is priced by a pure ``delta_replicate_for_comm`` (no
-mutation at all), and the compound BR/SM/SR trials mutate inside a
+mutation at all), and the compound BR/SM trials mutate inside a
 ``begin()``/``commit()``/``rollback()`` transaction instead of working on a
-throwaway ``Schedule.copy()``.  Decisions are tie-broken deterministically
-(sorted comm/compute iteration, ``(superstep, processor)`` source keys) so
-the search trajectory is identical to the preserved full-recompute oracle
-in ``reference.py`` -- same final costs, O(touched-supersteps) work per
-trial instead of O(n + S*P + comms).
+throwaway ``Schedule.copy()``.  The SR pass goes further through the
+frontier layer (``core.frontier.schedule_front``): each superstep's whole
+``(s, p1, p2)`` candidate front is enumerated from one flat pass over the
+compute phase and priced *purely* (failed candidates never touch the undo
+log); only the winning candidate commits through a transaction.  Decisions
+are tie-broken deterministically (sorted comm/compute iteration,
+``(superstep, processor)`` source keys, lexicographic SR winner) so the
+search trajectory is identical to the preserved full-recompute oracle in
+``reference.py`` -- same final costs, O(touched-supersteps) work per trial
+instead of O(n + S*P + comms).
 """
 from __future__ import annotations
 
@@ -240,38 +245,23 @@ def superstep_merge_pass(sched: Schedule) -> tuple[Schedule, bool]:
 
 def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> bool:
     """SR: replicate (the useful part of) V_{p1,s} onto p2, in place under
-    a transaction.  Returns whether the replication was kept."""
+    a transaction.  Returns whether the replication was kept.
+
+    First-improvement comparator path (``use_fronts=False``); the mutation
+    sequence itself lives in ``frontier.apply_sr_mutations``, shared with
+    the winner-rule path and the oracle.
+    """
+    from ..frontier import apply_sr_mutations
+
     nodes = [v for v in sorted(sched.comp[s][p1])
              if p2 not in sched.assign[v] and sched.has_use_on(v, p2)]
     if not nodes:
         return False
-    node_set = set(nodes)
     before = sched.current_cost()
     sched.begin()
-    for v in nodes:
-        # parents must be present on p2 by superstep s
-        ok = True
-        for u in sched.inst.dag.parents[v]:
-            if sched.present_at(u, p2, s):
-                continue
-            if u in node_set and sched.assign[u].get(p1) == s:
-                continue  # replicated alongside
-            cs_any = min(sched.assign[u].values())
-            if cs_any <= s - 1 and s - 1 >= 0 and (u, p2) not in sched.comms:
-                src = min(sched.assign[u],
-                          key=lambda p: (sched.assign[u][p], p))
-                sched.add_comm(u, src, p2, s - 1)
-            else:
-                ok = False
-                break
-        if not ok:
-            sched.rollback()
-            return False
-        if (v, p2) in sched.comms:
-            cm_s = sched.comms[(v, p2)][1]
-            if cm_s >= s:  # arriving later than the replica -> drop the comm
-                sched.remove_comm(v, p2)
-        sched.add_comp(v, p2, s)
+    if not apply_sr_mutations(sched, s, p1, p2, nodes):
+        sched.rollback()
+        return False
     sched.prune_useless_comms()
     if sched.current_cost() < before - EPS:
         sched.commit()
@@ -280,23 +270,55 @@ def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> bool
     return False
 
 
-def superstep_replication_pass(sched: Schedule) -> tuple[Schedule, bool]:
+def superstep_replication_pass(sched: Schedule,
+                               use_fronts: bool = True) -> tuple[Schedule, bool]:
+    """SR sweep over supersteps.
+
+    Default path: per superstep, enumerate the whole ``(p1, p2)`` candidate
+    front from one flat pass (``frontier.sr_front``), price every candidate
+    purely (no transaction, no rollback; pruning after commit only helps),
+    and commit **the winner** -- minimal priced delta, ties to the
+    lexicographically smallest ``(p1, p2)`` -- through the transaction
+    machinery, repeating the superstep until no candidate improves.  The
+    oracle (``reference.superstep_replication_pass``) applies the same
+    winner rule, so trajectories stay identical.
+
+    ``use_fronts=False`` keeps the pre-frontier first-improvement
+    transactional sweep (benchmark comparator; may visit a different local
+    optimum than the winner rule).
+    """
     improved = False
     P = sched.inst.P
     s = 0
-    while s < sched.S:
-        done = False
-        for p1 in range(P):
-            for p2 in range(P):
-                if p1 == p2:
-                    continue
-                if try_superstep_replication(sched, s, p1, p2):
-                    improved = done = True
+    if not use_fronts:
+        while s < sched.S:
+            done = False
+            for p1 in range(P):
+                for p2 in range(P):
+                    if p1 == p2:
+                        continue
+                    if try_superstep_replication(sched, s, p1, p2):
+                        improved = done = True
+                        break
+                if done:
                     break
-            if done:
-                break
-        if not done:
+            if not done:
+                s += 1
+        return sched, improved
+    from ..frontier import (commit_superstep_replication,
+                            price_superstep_replication, sr_front)
+    while s < sched.S:
+        best = None
+        for (p1, p2, nodes) in sr_front(sched, s):
+            priced = price_superstep_replication(sched, s, p1, p2, nodes)
+            if priced is not None and priced < -EPS:
+                if best is None or priced < best[0]:
+                    best = (priced, p1, p2, nodes)
+        if best is None:
             s += 1
+        else:
+            commit_superstep_replication(sched, s, *best[1:])
+            improved = True  # retry the same superstep with the new state
     return sched, improved
 
 
@@ -327,6 +349,8 @@ class AdvancedOptions:
     superstep_merging: bool = True
     superstep_replication: bool = True
     max_rounds: int = 8
+    # False = pre-frontier first-improvement SR sweep (benchmark comparator)
+    use_fronts: bool = True
 
 
 def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> Schedule:
@@ -343,7 +367,8 @@ def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> 
         if opts.batch_replication:
             improved |= batch_replication_pass(sched)
         if opts.superstep_replication:
-            sched, imp = superstep_replication_pass(sched)
+            sched, imp = superstep_replication_pass(
+                sched, use_fronts=opts.use_fronts)
             improved |= imp
         # interleave the basic move as cleanup (cheap local improvements)
         before = sched.current_cost()
