@@ -23,7 +23,7 @@ from repro.core.partition import (exact_partition, is_valid, partition_cost,
                                   partition_with_replication,
                                   replicate_local_search)
 from repro.core.partition.reference import partition_heuristic_reference
-from repro.datagen import moe_dataset, spmv_dataset
+from repro.datagen import large_row_net, moe_dataset, spmv_dataset
 from repro.datagen.spmv import row_net_hypergraph, synthetic_sparse_matrix
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
@@ -245,6 +245,66 @@ def bench_frontier(P=4, eps=0.05, seed=0):
     return {"scale": rows, "replication": replication}
 
 
+def bench_multilevel(P=8, eps=0.05, seed=0, sizes=None, flat_limit=None):
+    """Flat vs multilevel V-cycle at scale (PR 4 tentpole).
+
+    End-to-end ``partition_with_replication`` on streaming row-net
+    instances: the V-cycle path (``multilevel=True``) at every size, the
+    flat path up to ``flat_limit`` (beyond it a single flat run takes
+    minutes -- the scaling wall the V-cycle removes).  Wherever both run,
+    the V-cycle's final cost must be at or below the flat cost
+    (``cost_not_worse``); rows land in ``BENCH_partition.json`` as
+    ``multilevel_scale`` via ``run.py``.
+    """
+    sizes = sizes or ((4096, 8192, 16384, 32768, 65536) if FULL
+                      else (4096, 8192, 16384, 65536))
+    flat_limit = flat_limit if flat_limit is not None else \
+        (16384 if FULL else 8192)
+    rows = []
+    for n in sizes:
+        hg = large_row_net(n, seed=seed + n)
+        t0 = time.perf_counter()
+        base, rep = partition_with_replication(hg, P, eps, seed=seed,
+                                               multilevel=True)
+        t_ml = time.perf_counter() - t0
+        assert is_valid(hg, rep.masks, P, eps)
+        row = {
+            "n": hg.n, "edges": len(hg.edges), "pins": int(hg.num_pins),
+            "P": P, "eps": eps,
+            "ml_seconds": t_ml,
+            "ml_base_cost": float(base.cost),
+            "ml_rep_cost": float(rep.cost),
+            "ml_reduction_pct": (100.0 * (1 - rep.cost / base.cost)
+                                 if base.cost > 0 else 0.0),
+        }
+        if hg.n <= flat_limit:
+            t0 = time.perf_counter()
+            fbase, frep = partition_with_replication(
+                hg, P, eps, exact_node_limit=0, seed=seed)
+            t_flat = time.perf_counter() - t0
+            row.update(flat_seconds=t_flat,
+                       flat_base_cost=float(fbase.cost),
+                       flat_rep_cost=float(frep.cost),
+                       speedup=t_flat / t_ml,
+                       cost_not_worse=bool(rep.cost <= frep.cost + 1e-9))
+        rows.append(row)
+    return {"scale": rows}
+
+
+def multilevel_smoke(P=4, eps=0.1, seed=0):
+    """Small-n CI smoke: exercise the whole V-cycle path on every push.
+
+    Asserts validity, base >= rep, and final-cost parity (<=) against the
+    flat path at a size where both run in seconds.
+    """
+    out = bench_multilevel(P=P, eps=eps, seed=seed, sizes=(1024, 2048),
+                           flat_limit=2048)
+    for row in out["scale"]:
+        assert row["ml_rep_cost"] <= row["ml_base_cost"] + 1e-9
+        assert row.get("cost_not_worse", True), row
+    return out
+
+
 def run_all():
     t0 = time.time()
     results = {}
@@ -254,10 +314,15 @@ def run_all():
     results["forms"] = table_forms()
     results["engine"] = bench_engine()
     results["frontier"] = bench_frontier()
+    results["multilevel"] = bench_multilevel()
     results["seconds"] = time.time() - t0
     return results
 
 
 if __name__ == "__main__":
     import json
-    print(json.dumps(run_all(), indent=1))
+    import sys
+    if "--multilevel-smoke" in sys.argv:
+        print(json.dumps(multilevel_smoke(), indent=1))
+    else:
+        print(json.dumps(run_all(), indent=1))

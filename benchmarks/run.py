@@ -52,6 +52,7 @@ def main() -> None:
         "replication_large": part["engine"]["replication_large"],
         "frontier_scale": part["frontier"]["scale"],
         "frontier_replication": part["frontier"]["replication"],
+        "multilevel_scale": part["multilevel"]["scale"],
         "datasets": {
             ds: {"instances_per_sec": row["instances_per_sec"],
                  "best_cost": min((r for _, r in row["pairs"]), default=0.0)}
@@ -76,6 +77,14 @@ def main() -> None:
     _emit(f"partition_frontier_rep_n{frep['n']}", frep["seconds_numpy"],
           f"speedup_numpy={frep['speedup_numpy']:.2f}x;"
           f"rep_cost={frep['rep_cost']:.0f}")
+    for row in part["multilevel"]["scale"]:
+        flat = (f"flat={row['flat_seconds']:.1f}s;"
+                f"speedup={row['speedup']:.1f}x;"
+                f"not_worse={row['cost_not_worse']};"
+                if "flat_seconds" in row else "")
+        _emit(f"partition_multilevel_n{row['n']}", row["ml_seconds"],
+              flat + f"rep_cost={row['ml_rep_cost']:.0f};"
+              f"reduction={row['ml_reduction_pct']:.1f}%")
 
     # ---- scheduling (paper Tables 2, 3, 4) -------------------------------
     sched = scheduling.run_all()

@@ -7,11 +7,20 @@ Uses the real framework path: config registry -> Trainer (fault-tolerant
 loop, atomic checkpoints, deterministic data) -> loss curve.  ``--full-135m``
 trains the full 135M-parameter SmolLM config (slow on 1 CPU core; the same
 command drives a pod via --production-mesh in repro.launch.train).
+
+Multilevel partitioning path (PR 4):
+
+    PYTHONPATH=src python examples/quickstart.py --multilevel [--n 8192]
+
+runs the V-cycle partitioner (coarsen -> coarsest solve -> project ->
+refine -> replicate) on a streaming spmv row-net instance and prints the
+per-level cost trajectory plus the flat-heuristic comparison.
 """
 import argparse
 import pathlib
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
@@ -22,6 +31,36 @@ from repro.optim import adamw
 from repro.runtime.trainer import Trainer, TrainerConfig
 
 
+def multilevel_demo(n: int, P: int = 8, eps: float = 0.05) -> None:
+    """Partition a production-scale spmv row-net with the V-cycle."""
+    from repro.core.partition import (is_valid, partition_heuristic,
+                                      partition_with_replication_multilevel)
+    from repro.datagen import large_row_net
+
+    hg = large_row_net(n, seed=0)
+    print(f"multilevel: {hg.name} n={hg.n} edges={len(hg.edges)} "
+          f"pins={hg.num_pins} P={P} eps={eps}")
+    stats: list = []
+    t0 = time.perf_counter()
+    base, rep = partition_with_replication_multilevel(hg, P, eps, seed=0,
+                                                      stats=stats)
+    dt = time.perf_counter() - t0
+    for row in stats:
+        print(f"  level {row['level']:2d}  n={row['n']:7d}  "
+              f"projected={row['cost_projected']:.0f}  "
+              f"refined={row['cost_refined']:.0f}")
+    assert is_valid(hg, rep.masks, P, eps)
+    red = 100.0 * (1 - rep.cost / base.cost) if base.cost else 0.0
+    print(f"V-cycle: base={base.cost:.0f} repl={rep.cost:.0f} "
+          f"(-{red:.1f}%) in {dt:.1f}s")
+    if n <= 8192:  # flat comparison only where the flat path is tractable
+        t0 = time.perf_counter()
+        flat = partition_heuristic(hg, P, eps, seed=0)
+        print(f"flat baseline: cost={flat.cost:.0f} in "
+              f"{time.perf_counter() - t0:.1f}s "
+              f"(multilevel {'<=' if base.cost <= flat.cost else '>'} flat)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -29,7 +68,15 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--full-135m", action="store_true")
+    ap.add_argument("--multilevel", action="store_true",
+                    help="run the multilevel V-cycle partitioning demo")
+    ap.add_argument("--n", type=int, default=8192,
+                    help="instance size for --multilevel")
     args = ap.parse_args()
+
+    if args.multilevel:
+        multilevel_demo(args.n)
+        return
 
     cfg = get_config(args.arch)
     if not args.full_135m:

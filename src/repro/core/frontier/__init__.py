@@ -19,15 +19,25 @@ heuristics keep their exact decision rules, so refactoring onto this layer
 changes wall-clock, not results (the one deliberate exception is the SR
 pass's commit-the-winner rule, applied to engine and oracle in lockstep).
 """
-from .partition_front import (GainCache, add_replica_candidates, get_backend,
-                              move_candidates, price_mask_front, set_backend)
-from .schedule_front import (apply_sr_mutations, commit_superstep_replication,
-                             node_move_targets, price_node_moves,
-                             price_superstep_replication, sr_front)
+from .partition_front import (GainCache, add_replica_candidates,
+                              connected_add_candidates, connected_targets,
+                              fm_move_candidates, get_backend,
+                              lookahead_window, move_candidates,
+                              price_mask_front, refresh_boundary_window,
+                              set_backend)
+from .schedule_front import (apply_sm_mutations, apply_sr_mutations,
+                             commit_superstep_merge,
+                             commit_superstep_replication, node_move_targets,
+                             price_node_moves, price_superstep_merge,
+                             price_superstep_replication, sm_front, sr_front)
 
 __all__ = [
-    "GainCache", "add_replica_candidates", "get_backend", "move_candidates",
-    "price_mask_front", "set_backend",
-    "apply_sr_mutations", "commit_superstep_replication", "node_move_targets",
-    "price_node_moves", "price_superstep_replication", "sr_front",
+    "GainCache", "add_replica_candidates", "connected_add_candidates",
+    "connected_targets", "fm_move_candidates", "get_backend",
+    "lookahead_window", "move_candidates", "price_mask_front",
+    "refresh_boundary_window", "set_backend",
+    "apply_sm_mutations", "apply_sr_mutations", "commit_superstep_merge",
+    "commit_superstep_replication", "node_move_targets", "price_node_moves",
+    "price_superstep_merge", "price_superstep_replication", "sm_front",
+    "sr_front",
 ]

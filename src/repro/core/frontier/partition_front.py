@@ -23,6 +23,15 @@ Two interchangeable lambda backends (selected per call or via
 invalidates through the pin-adjacency on every applied move, so FM-style
 passes reprice only nodes whose gain actually changed (output-sensitive)
 and reprice them in batched fronts instead of one engine call per node.
+
+PR 4 (multilevel) additions, all decision-identical and shared with the
+flat heuristics: ``connected_targets`` restricts candidate fronts to
+processors that appear in another pin of a shared edge (moves toward
+unconnected processors provably cannot strictly improve), front pricing
+exploits the single-pin-change lambda bound (``_bounded_lambdas``: only
+popcount classes ``lambda_old +- 1`` can hold the first zero cover), and
+``lookahead_window`` adapts the GainCache scan window to the instance's
+degree so dense coarse levels do not thrash the cache.
 """
 from __future__ import annotations
 
@@ -105,7 +114,11 @@ def price_mask_front(state: PartitionState, vs: np.ndarray, cands: np.ndarray,
     nsub = state._contrib.shape[0]
     chunk_rows = max(_CHUNK_ELEMS // nsub, 1)
     R = len(edge_rep)
-    base_lam = np.maximum(state.edge_lambda[edge_rep].astype(np.float64) - 1, 0)
+    lam_old_all = state.edge_lambda[edge_rep]
+    base_lam = np.maximum(lam_old_all.astype(np.float64) - 1, 0)
+    order, order_pc = state._order, state._order_pc
+    # popcount-class boundaries inside ``order`` (classes 1..P)
+    bounds = np.searchsorted(order_pc, np.arange(int(order_pc[-1]) + 2))
     lo = 0
     while lo < R:
         hi = min(lo + chunk_rows, R)
@@ -113,20 +126,119 @@ def price_mask_front(state: PartitionState, vs: np.ndarray, cands: np.ndarray,
         # pair's terms in one sequential run)
         while hi < R and pair_ids[hi] == pair_ids[hi - 1]:
             hi += 1
-        rows = (state.uncov[edge_rep[lo:hi]]
-                + state._contrib[cand_rows[lo:hi]]
-                - state._contrib[old_rows[lo:hi]])
-        lam = _lambdas(rows, state, backend).astype(np.float64)
-        terms = ((np.maximum(lam - 1, 0) - base_lam[lo:hi])
+        if nsub <= 64 or (backend == "jax" and hi - lo >= _JAX_MIN_ROWS):
+            # small tables (P <= 6): the one-shot scan beats the grouped
+            # bounded scan; jax: the device kernel takes full uncov rows.
+            # Both produce bit-equal lambdas.
+            rows = (state.uncov[edge_rep[lo:hi]]
+                    + state._contrib[cand_rows[lo:hi]]
+                    - state._contrib[old_rows[lo:hi]])
+            lam = _lambdas(rows, state, backend)
+        else:
+            lam = _bounded_lambdas(state, edge_rep[lo:hi],
+                                   cand_rows[lo:hi], old_rows[lo:hi],
+                                   lam_old_all[lo:hi], order, bounds)
+        terms = ((np.maximum(lam.astype(np.float64) - 1, 0) - base_lam[lo:hi])
                  * state.mu[edge_rep[lo:hi]])
         out += np.bincount(pair_ids[lo:hi], weights=terms, minlength=C)
         lo = hi
     return out
 
 
+def _bounded_lambdas(state: PartitionState, er: np.ndarray,
+                     cand: np.ndarray, old: np.ndarray,
+                     lam_old: np.ndarray, order: np.ndarray,
+                     bounds: np.ndarray) -> np.ndarray:
+    """Candidate-row lambdas using the single-pin-change bound.
+
+    Every front row is ``uncov[e]`` with exactly one pin's mask changed,
+    and a one-pin change moves an edge's min cover by at most one:
+    re-adding the pin to any cover of the remaining pins costs at most one
+    extra processor (so ``lam_new <= lam_old + 1`` and, symmetrically,
+    ``lam_old <= lam_new + 1``).  Only the popcount classes
+    ``[lam_old - 1, lam_old + 1]`` of the subset order can therefore hold
+    the first zero, so per ``lam_old`` group at most three classes are
+    scanned (column 0 settles the no-assigned-pin case) -- identical
+    integers to the full 2^P scan at a fraction of the work.
+    """
+    n_rows = len(er)
+    lam = np.zeros(n_rows, dtype=np.int16)
+    if n_rows == 0:
+        return lam
+    P_max = int(state._order_pc[-1])
+    rows = state.uncov[er] + state._contrib[cand] - state._contrib[old]
+    for k in np.unique(lam_old):
+        idx = np.flatnonzero(lam_old == k)
+        rem = idx
+        for pc in range(max(int(k) - 1, 1), min(int(k) + 1, P_max) + 1):
+            cols = order[bounds[pc]:bounds[pc + 1]]
+            hit = (rows[np.ix_(rem, cols)] == 0).any(axis=1)
+            lam[rem[hit]] = pc
+            rem = rem[~hit]
+            if not len(rem):
+                break
+        # rows still unresolved lost their last assigned pin (lambda 0)
+    lam[rows[:, 0] == 0] = 0
+    return lam
+
+
 # --------------------------------------------------------------------------
 # Candidate builders (vectorized): masks per node, ascending processor order
 # --------------------------------------------------------------------------
+
+def connected_targets(state: PartitionState, vs: np.ndarray) -> np.ndarray:
+    """(len(vs), P) bools: q appears in another pin of an edge of ``vs[i]``.
+
+    ``uncov[e, 0] > uncov[e, 1 << q]`` says some assigned pin of e carries
+    q; for candidate processors (q outside the node's own mask) that pin
+    is necessarily another node.  A mask change toward an *unconnected* q
+    can never strictly improve: a cover of the changed edge that beats the
+    old lambda would have to avoid the node's old mask entirely and enter
+    through q, which costs a full extra processor unless q already hits
+    some other pin.  Restricting candidate fronts to connected targets is
+    therefore decision-identical and shrinks the priced volume by ~P/deg
+    of the cut (pinned by ``tests/test_multilevel.py``).
+    """
+    P = state.P
+    vs = np.asarray(vs, dtype=np.int64)
+    out = np.zeros((len(vs), P), dtype=bool)
+    if len(vs) == 0:
+        return out
+    deg = state.xinc[vs + 1] - state.xinc[vs]
+    edges_rep = state.inc_edges[_ragged_gather(state.xinc[vs], deg)]
+    if len(edges_rep) == 0:
+        return out
+    cols = np.concatenate(([0], np.int64(1) << np.arange(P, dtype=np.int64)))
+    # outer-product gather: only the P+1 needed columns, never the full
+    # (rows, 2^P) intermediate
+    sub = state.uncov[edges_rep[:, None], cols[None, :]]
+    haveq = sub[:, 1:] < sub[:, :1]
+    nz = deg > 0
+    starts = np.cumsum(deg) - deg
+    out[nz] = np.logical_or.reduceat(haveq, starts[nz], axis=0)
+    return out
+
+
+def fm_move_candidates(state: PartitionState, vs: np.ndarray):
+    """``move_candidates`` restricted to connected targets (the FM default
+    builder): same ascending-q order, same deltas for every emitted
+    candidate, decision-identical to the unrestricted front because every
+    dropped candidate's delta is provably >= 0."""
+    P = state.P
+    vs = np.asarray(vs, dtype=np.int64)
+    prim = np.zeros(len(vs), dtype=np.int64)
+    m = state.masks[vs].copy()
+    while np.any(m > 1):                      # primary = highest set bit
+        gt = m > 1
+        prim[gt] += 1
+        m[gt] >>= 1
+    targets = np.arange(P, dtype=np.int64)
+    keep = (targets[None, :] != prim[:, None]) & connected_targets(state, vs)
+    cands = np.broadcast_to(np.int64(1) << targets, (len(vs), P))[keep]
+    xcand = np.zeros(len(vs) + 1, dtype=np.int64)
+    np.cumsum(keep.sum(axis=1), out=xcand[1:])
+    return cands, xcand
+
 
 def move_candidates(state: PartitionState, vs: np.ndarray):
     """FM move front: for each single-assignment node, masks ``1 << q`` for
@@ -159,6 +271,23 @@ def add_replica_candidates(state: PartitionState, vs: np.ndarray):
     cands = (m[:, None] | (np.int64(1) << targets)[None, :])[unset]
     xcand = np.zeros(len(vs) + 1, dtype=np.int64)
     np.cumsum(unset.sum(axis=1), out=xcand[1:])
+    return cands, xcand
+
+
+def connected_add_candidates(state: PartitionState, vs: np.ndarray):
+    """``add_replica_candidates`` restricted to connected targets (the
+    replication default builder): an added replica lowers some lambda only
+    when the new processor already appears in another pin of a shared
+    edge, so dropping unconnected targets is decision-identical."""
+    P = state.P
+    vs = np.asarray(vs, dtype=np.int64)
+    m = state.masks[vs]
+    targets = np.arange(P, dtype=np.int64)
+    keep = (((m[:, None] >> targets[None, :]) & 1) == 0) \
+        & connected_targets(state, vs)
+    cands = (m[:, None] | (np.int64(1) << targets)[None, :])[keep]
+    xcand = np.zeros(len(vs) + 1, dtype=np.int64)
+    np.cumsum(keep.sum(axis=1), out=xcand[1:])
     return cands, xcand
 
 
@@ -233,3 +362,37 @@ class GainCache:
     @property
     def dirty_count(self) -> int:
         return int(self._dirty.sum())
+
+
+def refresh_boundary_window(cache: GainCache, perm: np.ndarray, i: int,
+                            W: int) -> None:
+    """Reprice the dirty *boundary* slice of ``perm[i:i + W]`` in one front.
+
+    Single home of the scan loops' lookahead rule (fm_refine and
+    replicate_local_search share it): nodes already clean keep their
+    cached deltas, and interior nodes -- every incident edge at
+    lambda <= 1 -- are skipped because their prices are never consulted
+    (the visit loops skip them via the same boundary test).  Purely a
+    batching choice; cached values stay exact either way.
+    """
+    st = cache.state
+    xinc, inc_edges, elam = st.xinc, st.inc_edges, st.edge_lambda
+    win = [u for u in (int(x) for x in perm[i:i + W])
+           if cache.is_dirty(u) and xinc[u] < xinc[u + 1]
+           and int(elam[inc_edges[xinc[u]:xinc[u + 1]]].max()) > 1]
+    cache.refresh_window(np.asarray(win, dtype=np.int64))
+
+
+def lookahead_window(state: PartitionState) -> int:
+    """Permutation-lookahead width for ``GainCache`` scan loops.
+
+    Purely a batching choice (cached values are exact regardless, so
+    decisions cannot change): wide windows amortize numpy call overhead on
+    low-degree instances, but on high-degree ones (coarse multilevel
+    levels average hundreds of pins per node) a 64-node window prices tens
+    of thousands of rows per cache miss, most re-dirtied before their
+    visit.  Target a few thousand rows per window instead.
+    """
+    hg = state.hg
+    rows_per_node = (len(state.pins) / max(hg.n, 1)) * max(state.P - 1, 1)
+    return int(min(64, max(8, 4096 // max(int(rows_per_node), 1))))

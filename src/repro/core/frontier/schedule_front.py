@@ -1,6 +1,6 @@
 """Batched candidate-front pricing for the BSP schedule engine.
 
-Two fronts from the scheduling stack's hot loops:
+Three fronts from the scheduling stack's hot loops:
 
   * **Node moves** (``list_sched.hill_climb``): ``price_node_moves`` prices
     moving a single-assignment node to *every* processor at once.  The
@@ -20,13 +20,26 @@ Two fronts from the scheduling stack's hot loops:
     candidates never touch the undo log.  Pruning after a commit can only
     reduce the cost further, so a candidate priced improving is improving.
 
-Both are pure; committing stays with the engine's transaction machinery.
+  * **Superstep merging** (``replication.superstep_merge_pass``):
+    ``sm_front`` is simply every adjacent pair ``(s, s + 1)``;
+    ``price_superstep_merge`` prices one merge *purely* by replaying the
+    exact mutation sequence of ``apply_sm_mutations`` against a virtual
+    overlay (``_MergeSim``) -- comm moves to s-1, recursive replication of
+    values produced in the merged step, compute and comm shifts from s+1
+    -- so failed or losing candidates never touch the undo log.  Like SR,
+    the price is the *pre-prune* delta (pruning after a commit can only
+    lower the cost further) and only the **winner** (min priced delta,
+    ties to the smallest s) commits through a transaction; the
+    ``reference.py`` oracle applies the same winner rule in lockstep, so
+    trajectories stay bit-identical on integer weights.
+
+All are pure; committing stays with the engine's transaction machinery.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from ..schedule.engine import EPS, ScheduleState
+from ..schedule.engine import EPS, INF, ScheduleState
 
 
 def price_node_moves(sched: ScheduleState, v: int) -> np.ndarray:
@@ -258,6 +271,283 @@ def apply_sr_mutations(sched, s: int, p1: int, p2: int,
             sched.remove_comm(v, p2)  # arrives later than the replica
         sched.add_comp(v, p2, s)
     return True
+
+
+# --------------------------------------------------------------------------
+# Superstep-merging front
+# --------------------------------------------------------------------------
+
+def _ensure_present_for_merge(sched, v: int, dst: int, s: int) -> bool:
+    """Make value v usable on dst within merged superstep s, replicating
+    recursively when the producer sits in superstep s itself (paper SM).
+    Mutates sched; returns False if impossible (caller rolls back).
+
+    Single home of the recursion, shared by the engine commit, the
+    ``reference.py`` oracle and -- cell-for-cell -- the pure pricing
+    simulation below (``_MergeSim`` implements the same mutation API).
+    """
+    if sched.present_at(v, dst, s):
+        return True
+    cs_any = min(sched.assign[v].values())
+    if cs_any <= s - 1 and s - 1 >= 0 and (v, dst) not in sched.comms:
+        src = min(sched.assign[v],
+                  key=lambda p: (sched.assign[v][p], p))
+        sched.add_comm(v, src, dst, s - 1)
+        return True
+    # must replicate v on dst at superstep s -> parents must be available too
+    if dst in sched.assign[v]:
+        return False  # computed later on dst; moving it up is out of scope
+    for u in sched.inst.dag.parents[v]:
+        if not _ensure_present_for_merge(sched, u, dst, s):
+            return False
+    sched.add_comp(v, dst, s)
+    return True
+
+
+def apply_sm_mutations(sched, s: int, comms_at=None) -> bool:
+    """The SM mutation sequence (no prune): comms at s used at s+1 move to
+    s-1 or are replaced by recursive replication, compute and comms of
+    s+1 shift into s.
+
+    Single home of the sequence, shared by the engine commit, the
+    ``reference.py`` oracle (mutation API only) and the pure pricing
+    simulation (a ``_MergeSim`` quacks like a schedule).  Returns False
+    when the merge is infeasible (caller rolls back / discards).
+
+    ``comms_at`` optionally supplies the two sorted comm snapshots
+    ``(at s, at s+1)`` so a pricing sweep can sort the comm dict once per
+    round instead of once per candidate.  This is exactly the iteration
+    the inline sort produces: the s+1 snapshot stays valid throughout
+    because the earlier steps only remove/move comms scheduled *at s* and
+    only add comms at s-1.
+    """
+    P = sched.inst.P
+    if comms_at is None:
+        snap = sorted(sched.comms.items())
+        at_s = [kv for kv in snap if kv[1][1] == s]
+        at_s1 = [kv for kv in snap if kv[1][1] == s + 1]
+    else:
+        at_s, at_s1 = comms_at
+    for (v, dst), (src, t) in at_s:
+        uses = [x for x in sched.uses_on(v, dst)
+                if x > t and not sched.compute_sstep(v, dst) <= x]
+        if not uses or min(uses) > s + 1:
+            continue  # stays in merged superstep, delivers for >= s+2
+        if sched.assign[v].get(src, INF) <= s - 1 and s - 1 >= 0:
+            sched.move_comm(v, dst, s - 1)
+            continue
+        # replicate v (and recursively its parents) on dst
+        sched.remove_comm(v, dst)
+        if not _ensure_present_for_merge(sched, v, dst, s):
+            return False
+    # move compute s+1 -> s.  A pricing sim aggregates the whole shift
+    # into per-processor work transfers (``shift_comp_bulk``): nothing
+    # after this step reads assignments, and the per-node infeasibility
+    # guard below cannot fire (``_ensure_present_for_merge`` refuses to
+    # replicate onto a processor the value is already assigned to).
+    shift = getattr(sched, "shift_comp_bulk", None)
+    if shift is not None:
+        shift(s)
+    else:
+        for p in range(P):
+            for v in sorted(sched.comp[s + 1][p]):
+                sched.remove_comp(v, p)
+                if p in sched.assign[v]:
+                    return False  # already replicated there during merge
+                sched.add_comp(v, p, s)
+    # move comms at s+1 -> s
+    for (v, dst), _ in at_s1:
+        sched.move_comm(v, dst, s)
+    return True
+
+
+class _CowComms:
+    """Copy-on-write view of a comm dict: reads fall through to the base,
+    writes land in an overlay (None = removed).  Supports exactly the
+    operations the SM sequence performs -- ``get`` / ``in`` / ``[]`` /
+    ``pop`` / ``[] =`` -- so building a pricing sim is O(1) instead of
+    O(comms)."""
+
+    __slots__ = ("base", "over")
+
+    def __init__(self, base: dict) -> None:
+        self.base = base
+        self.over: dict = {}
+
+    def get(self, k, default=None):
+        if k in self.over:
+            v = self.over[k]
+            return default if v is None else v
+        return self.base.get(k, default)
+
+    def __contains__(self, k) -> bool:
+        return self.get(k) is not None
+
+    def __getitem__(self, k):
+        v = self.get(k)
+        if v is None:
+            raise KeyError(k)
+        return v
+
+    def __setitem__(self, k, v) -> None:
+        self.over[k] = v
+
+    def pop(self, k):
+        v = self[k]
+        self.over[k] = None
+        return v
+
+    def items(self):
+        for k, v in self.base.items():
+            if k not in self.over:
+                yield k, v
+        for k, v in self.over.items():
+            if v is not None:
+                yield k, v
+
+
+class _MergeSim:
+    """Virtual overlay over a ``ScheduleState`` exposing exactly the reads
+    and mutations ``apply_sm_mutations`` performs, without touching the
+    real schedule.  Mutations accumulate cost cells instead; the price is
+    ``base._delta_cells(cells)`` at the end.
+
+    Only the members the SM sequence uses are implemented: ``comms`` /
+    ``assign`` (merged dict views), ``comp`` (base -- the sequence never
+    revisits a phase it mutates), ``uses_on`` / ``compute_sstep`` /
+    ``present_at``, and the four mutation primitives.
+    """
+
+    def __init__(self, base: ScheduleState) -> None:
+        self.base = base
+        self.inst = base.inst
+        self.comp = base.comp          # never mutated during pricing
+        self.cells: list[tuple[str, int, int, float]] = []
+        self.comms = _CowComms(base.comms)
+        self._assign: dict[int, dict[int, int]] = {}   # copy-on-write
+        self._src: dict[tuple[int, int], set[int]] = {}
+
+    # ------------------------------------------------------------- views
+    @property
+    def assign(self):
+        return self
+
+    def __getitem__(self, v: int) -> dict[int, int]:
+        # self.assign[v] -- copy-on-write per node
+        got = self._assign.get(v)
+        if got is None:
+            got = dict(self.base.assign[v])
+            self._assign[v] = got
+        return got
+
+    def _src_set(self, v: int, src: int) -> set[int]:
+        key = (v, src)
+        got = self._src.get(key)
+        if got is None:
+            got = set(self.base.src_index.get(key, ()))
+            self._src[key] = got
+        return got
+
+    def compute_sstep(self, v: int, p: int) -> float:
+        return self[v].get(p, INF)
+
+    def recv_sstep(self, v: int, p: int) -> float:
+        c = self.comms.get((v, p))
+        return c[1] if c is not None else INF
+
+    def present_at(self, v: int, p: int, s: int) -> bool:
+        return self.compute_sstep(v, p) <= s or self.recv_sstep(v, p) < s
+
+    def uses_on(self, v: int, p: int) -> list[int]:
+        out = []
+        for c in self.inst.dag.children[v]:
+            t = self[c].get(p)
+            if t is not None:
+                out.append(t)
+        for dst in self._src_set(v, p):
+            out.append(self.comms[(v, dst)][1])
+        return sorted(out)
+
+    # --------------------------------------------------------- mutations
+    def add_comp(self, v: int, p: int, s: int) -> None:
+        assert p not in self[v]
+        self[v][p] = s
+        self.cells.append(("work", s, p, self.inst.dag.omega[v]))
+
+    def remove_comp(self, v: int, p: int) -> None:
+        s = self[v].pop(p)
+        self.cells.append(("work", s, p, -self.inst.dag.omega[v]))
+
+    def add_comm(self, v: int, src: int, dst: int, s: int) -> None:
+        assert (v, dst) not in self.comms
+        self.comms[(v, dst)] = (src, s)
+        self._src_set(v, src).add(dst)
+        mu = self.inst.dag.mu[v]
+        self.cells.append(("sent", s, src, mu))
+        self.cells.append(("recv", s, dst, mu))
+
+    def remove_comm(self, v: int, dst: int) -> None:
+        src, s = self.comms.pop((v, dst))
+        self._src_set(v, src).discard(dst)
+        mu = self.inst.dag.mu[v]
+        self.cells.append(("sent", s, src, -mu))
+        self.cells.append(("recv", s, dst, -mu))
+
+    def move_comm(self, v: int, dst: int, new_s: int) -> None:
+        src, _ = self.comms[(v, dst)]
+        self.remove_comm(v, dst)
+        self.add_comm(v, src, dst, new_s)
+
+    def shift_comp_bulk(self, s: int) -> None:
+        """Aggregate the s+1 -> s compute shift: the work row at s+1 *is*
+        the per-processor omega sum of ``comp[s + 1]``, so the whole step
+        collapses into P cell transfers (step 1 never touches row s+1)."""
+        row = self.base.work[s + 1]
+        for p in range(self.inst.P):
+            w = row[p]
+            if w:
+                self.cells.append(("work", s + 1, p, -w))
+                self.cells.append(("work", s, p, w))
+
+
+def sm_front(sched: ScheduleState) -> list[int]:
+    """All SM candidates: merge s+1 into s for every adjacent pair."""
+    return list(range(sched.S - 1))
+
+
+def price_superstep_merge(sched: ScheduleState, s: int,
+                          comms_at=None) -> float | None:
+    """Pure price of merging superstep s+1 into s.
+
+    Replays ``apply_sm_mutations`` against a virtual overlay, so the real
+    schedule (and its undo log) is never touched; returns the *pre-prune*
+    cost delta -- the quantity both search paths rank winners by; pruning
+    after a commit only lowers it further -- or None when the merge is
+    infeasible (the transactional trial would roll back).  ``comms_at``
+    forwards the pre-sorted per-superstep comm snapshots (see
+    ``apply_sm_mutations``).
+    """
+    if s + 1 >= sched.S:
+        return None
+    sim = _MergeSim(sched)
+    if not apply_sm_mutations(sim, s, comms_at):
+        return None
+    return sched._delta_cells(sim.cells)
+
+
+def commit_superstep_merge(sched: ScheduleState, s: int) -> None:
+    """Replay a priced SM winner through the transaction machinery, then
+    prune (the commit is never worse than its price) and compact."""
+    sched.begin()
+    try:
+        if not apply_sm_mutations(sched, s):
+            raise RuntimeError("priced SM became infeasible at commit")
+        sched.prune_useless_comms()
+    except BaseException:
+        sched.rollback()
+        raise
+    sched.commit()
+    sched.compact()
 
 
 def commit_superstep_replication(sched: ScheduleState, s: int, p1: int,

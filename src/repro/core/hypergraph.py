@@ -23,6 +23,10 @@ class Hypergraph:
     omega: np.ndarray | None = None  # node weights, shape (n,)
     mu: np.ndarray | None = None     # hyperedge weights, shape (len(edges),)
     name: str = "hypergraph"
+    # edges already sorted, deduplicated tuples of in-range ints: skip the
+    # per-edge python normalization pass (used by vectorized constructors --
+    # ``contract`` and the streaming datagen -- where it would dominate)
+    presorted: bool = False
 
     def __post_init__(self) -> None:
         if self.omega is None:
@@ -33,10 +37,11 @@ class Hypergraph:
             self.mu = np.ones(len(self.edges), dtype=np.float64)
         else:
             self.mu = np.asarray(self.mu, dtype=np.float64)
-        self.edges = [tuple(sorted(set(e))) for e in self.edges]
-        for e in self.edges:
-            if any(v < 0 or v >= self.n for v in e):
-                raise ValueError(f"edge {e} out of range for n={self.n}")
+        if not self.presorted:
+            self.edges = [tuple(sorted(set(e))) for e in self.edges]
+            for e in self.edges:
+                if any(v < 0 or v >= self.n for v in e):
+                    raise ValueError(f"edge {e} out of range for n={self.n}")
         self._csr: tuple[np.ndarray, ...] | None = None
 
     @property
@@ -110,12 +115,94 @@ class Hypergraph:
     def incident_edges(self) -> list[list[int]]:
         """For each node, the list of edge indices containing it.
 
-        Compatibility view over the incident CSR; prefer ``xinc``/``inc_edges``
-        in hot paths.
+        .. deprecated:: PR 4
+            List-of-lists compatibility view over the incident CSR, kept
+            only so external callers keep working.  It materializes O(pins)
+            python lists on every call; everything in-repo now reads
+            ``xinc``/``inc_edges`` directly and new code should too.
         """
         xinc, inc_edges = self.xinc, self.inc_edges
         return [inc_edges[xinc[v]:xinc[v + 1]].tolist()
                 for v in range(self.n)]
+
+    # --------------------------------------------------- contraction layer
+    # Multilevel coarsening support (multilevel V-cycle, PR 4): given a
+    # cluster map ``cmap`` (fine node -> coarse node id), ``contract``
+    # builds the contracted hypergraph fully vectorized over the CSR pin
+    # arrays and returns the edge prolongation map alongside it.  The node
+    # prolongation map is ``cmap`` itself: coarse masks project to fine
+    # masks as ``coarse_masks[cmap]`` (replication masks project as unions
+    # -- every member of a cluster inherits the cluster's full mask, which
+    # *is* the union since the cluster is one coarse node).
+    def contract(self, cmap: np.ndarray,
+                 nc: int | None = None) -> tuple["Hypergraph", np.ndarray]:
+        """Contract clusters of nodes into single coarse nodes.
+
+        ``cmap[v]`` is the coarse id of fine node v (0 <= cmap[v] < nc).
+        Coarse node weights are the cluster sums of ``omega``.  Each fine
+        edge maps its pins through ``cmap`` and deduplicates; edges left
+        with fewer than two distinct coarse pins are dropped (their
+        ``lambda`` is at most 1 under any assignment, so they can never
+        cost anything), and edges with *identical* coarse pin sets collapse
+        into one coarse edge whose ``mu`` is their sum (identical-net
+        collapsing).  Returns ``(coarse, edge_map)`` with ``edge_map[e]``
+        the coarse edge id of fine edge e, or -1 if it was dropped.
+
+        Cost identity (the multilevel contract): for any coarse masks ``M``
+        the fine cost of the projected masks ``M[cmap]`` equals the coarse
+        cost of ``M``, and the per-processor loads agree exactly -- see
+        ``PartitionState.from_projection`` and ``tests/test_multilevel.py``.
+        """
+        cmap = np.asarray(cmap, dtype=np.int64)
+        if cmap.shape != (self.n,):
+            raise ValueError("cmap must have shape (n,)")
+        if nc is None:
+            nc = int(cmap.max()) + 1 if self.n else 0
+        if self.n and (cmap.min() < 0 or cmap.max() >= nc):
+            raise ValueError("cmap out of range")
+        omega_c = np.bincount(cmap, weights=self.omega, minlength=nc)
+        m = len(self.edges)
+        edge_map = np.full(m, -1, dtype=np.int64)
+        if m == 0:
+            coarse = Hypergraph(n=nc, edges=[], omega=omega_c,
+                                mu=np.zeros(0), name=f"{self.name}_c",
+                                presorted=True)
+            return coarse, edge_map
+        xpins, pins = self.xpins, self.pins
+        lens = np.diff(xpins)
+        cpins = cmap[pins]
+        edge_of_pin = np.repeat(np.arange(m, dtype=np.int64), lens)
+        # sort pins within each edge by coarse id, keep first of each run
+        order = np.lexsort((cpins, edge_of_pin))
+        ep, cp = edge_of_pin[order], cpins[order]
+        first = np.ones(len(cp), dtype=bool)
+        first[1:] = (ep[1:] != ep[:-1]) | (cp[1:] != cp[:-1])
+        ep, cp = ep[first], cp[first]
+        lens_c = np.bincount(ep, minlength=m)
+        xk = np.zeros(m + 1, dtype=np.int64)
+        np.cumsum(lens_c, out=xk[1:])
+        keep = lens_c >= 2
+        # identical-net collapsing: canonical key = the sorted coarse pin
+        # run; fine-edge order decides coarse edge ids (deterministic)
+        groups: dict[bytes, int] = {}
+        coarse_edges: list[tuple[int, ...]] = []
+        mu_list: list[float] = []
+        for e in np.flatnonzero(keep):
+            seg = cp[xk[e]:xk[e + 1]]
+            key = seg.tobytes()
+            idx = groups.get(key)
+            if idx is None:
+                idx = len(coarse_edges)
+                groups[key] = idx
+                coarse_edges.append(tuple(seg.tolist()))
+                mu_list.append(float(self.mu[e]))
+            else:
+                mu_list[idx] += float(self.mu[e])
+            edge_map[e] = idx
+        coarse = Hypergraph(n=nc, edges=coarse_edges, omega=omega_c,
+                            mu=np.asarray(mu_list, dtype=np.float64),
+                            name=f"{self.name}_c", presorted=True)
+        return coarse, edge_map
 
     def remove_isolated(self) -> "Hypergraph":
         """Drop nodes appearing in no hyperedge (paper §B.1 does the same)."""

@@ -70,6 +70,15 @@ def _tables(P: int):
     return popcnt, order, popcnt[order], contrib
 
 
+# cap on the (pins x 2^P) gather scratch of one _uncov_rows block
+# (elements): construction memory stays bounded at any instance size, which
+# is what keeps fresh PartitionState builds from projected masks cheap at
+# multilevel scale (n=65536 would otherwise materialize a multi-hundred-MB
+# intermediate).  Integer sums are associative, so blocking cannot change
+# any row.
+_UNCOV_CHUNK_ELEMS = 4_000_000
+
+
 def _uncov_rows(masks: np.ndarray, pins: np.ndarray, xpins: np.ndarray,
                 contrib: np.ndarray) -> np.ndarray:
     """uncov matrix (|E|, 2^P): per edge, sum of its pins' contrib rows.
@@ -77,6 +86,8 @@ def _uncov_rows(masks: np.ndarray, pins: np.ndarray, xpins: np.ndarray,
     Single home of the reduceat segmentation, shared by the engine and the
     batch cost path.  Empty edges (including trailing ones, whose start
     index would fall off the pins array) come out as all-zero rows.
+    Processes edges in blocks of at most ``_UNCOV_CHUNK_ELEMS`` scratch
+    elements (never splitting an edge), so peak memory is bounded.
     """
     m = len(xpins) - 1
     nsub = contrib.shape[0]
@@ -87,17 +98,52 @@ def _uncov_rows(masks: np.ndarray, pins: np.ndarray, xpins: np.ndarray,
     # increasing and in range, and consecutive non-empty starts delimit
     # exactly one edge's pins (empty edges contribute no pins in between)
     nonempty = xpins[:-1] < xpins[1:]
-    rows[nonempty] = np.add.reduceat(
-        contrib[masks[pins]], xpins[:-1][nonempty], axis=0)
+    chunk_pins = max(_UNCOV_CHUNK_ELEMS // nsub, 1)
+    e0 = 0
+    while e0 < m:
+        # last edge fully contained in the pin budget (at least one edge)
+        e1 = int(np.searchsorted(xpins, xpins[e0] + chunk_pins,
+                                 side="right")) - 1
+        e1 = min(max(e1, e0 + 1), m)
+        ne = nonempty[e0:e1]
+        if ne.any():
+            seg = contrib[masks[pins[xpins[e0]:xpins[e1]]]]
+            rows[e0:e1][ne] = np.add.reduceat(
+                seg, xpins[e0:e1][ne] - xpins[e0], axis=0)
+        e0 = e1
     return rows
 
 
 def _lambda_from_rows(rows: np.ndarray, order: np.ndarray,
                       order_pc: np.ndarray) -> np.ndarray:
-    """Min-cover size per uncov row (0 for rows with no assigned pin)."""
-    if rows.shape[0] == 0:
+    """Min-cover size per uncov row (0 for rows with no assigned pin).
+
+    Scans the popcount classes of ``order`` smallest-first and retires a
+    row at the first class containing a zero -- in a refined partition
+    almost every edge has lambda 1 or 2, so most rows only ever touch the
+    P singleton columns instead of all 2^P - 1 (output identical to the
+    full scan: the value is the *popcount* of the first zero subset, which
+    any zero inside the class determines).  For small tables (P <= 6) the
+    one-shot argmax over all columns is cheaper than the class loop.
+    """
+    m = rows.shape[0]
+    if m == 0:
         return np.zeros(0, dtype=np.int16)
-    lam = order_pc[np.argmax(rows[:, order] == 0, axis=1)].astype(np.int16)
+    if len(order) <= 63:  # P <= 6: full scan is a single vectorized op
+        lam = order_pc[np.argmax(rows[:, order] == 0, axis=1)].astype(np.int16)
+        lam[rows[:, 0] == 0] = 0
+        return lam
+    lam = np.zeros(m, dtype=np.int16)
+    remaining = np.arange(m)
+    # class boundaries: order_pc is sorted ascending (1, ..., P)
+    bounds = np.searchsorted(order_pc, np.arange(order_pc[-1] + 2))
+    for pc in range(1, int(order_pc[-1]) + 1):
+        lo, hi = bounds[pc], bounds[pc + 1]
+        hit = (rows[np.ix_(remaining, order[lo:hi])] == 0).any(axis=1)
+        lam[remaining[hit]] = pc
+        remaining = remaining[~hit]
+        if not len(remaining):
+            break
     lam[rows[:, 0] == 0] = 0
     return lam
 
@@ -123,7 +169,8 @@ class PartitionState:
 
     def __init__(self, hg: Hypergraph, P: int,
                  masks: np.ndarray | None = None,
-                 backend: str = "numpy") -> None:
+                 backend: str = "numpy",
+                 lambda_hint: np.ndarray | None = None) -> None:
         if backend not in ("numpy", "python"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
@@ -149,7 +196,15 @@ class PartitionState:
         # uncov[e] = sum of contrib rows of e's pins  (vectorized build)
         self.uncov = _uncov_rows(self.masks, self.pins, self.xpins,
                                  self._contrib)
-        self.edge_lambda = self._lambda_rows(self.uncov)
+        if lambda_hint is not None:
+            # caller-supplied per-edge lambdas (``from_projection``): must
+            # equal what the subset scan would compute -- skipping the scan
+            # is the single costly reduction of a from-masks build
+            self.edge_lambda = np.asarray(lambda_hint, dtype=np.int16)
+            if self.edge_lambda.shape != (m,):
+                raise ValueError("lambda_hint must have shape (|E|,)")
+        else:
+            self.edge_lambda = self._lambda_rows(self.uncov)
         self.cost = float(
             (self.mu * np.maximum(self.edge_lambda - 1, 0)).sum())
         bits = (self.masks[:, None] >> np.arange(self.P)) & 1
@@ -170,6 +225,47 @@ class PartitionState:
             self._nsub = nsub
             self.loads = self.loads.tolist()
             self._omega_l = self.omega.tolist()
+
+    # ------------------------------------------------------------- projection
+    @classmethod
+    def from_projection(cls, hg: Hypergraph, P: int,
+                        coarse_state: "PartitionState",
+                        cmap: np.ndarray,
+                        edge_map: np.ndarray) -> "PartitionState":
+        """Fine-level state from a coarse state's masks, projected down.
+
+        ``cmap``/``edge_map`` come from ``Hypergraph.contract`` (``hg`` is
+        the *fine* hypergraph the coarse one was contracted from).  Fine
+        masks are ``coarse_state.masks[cmap]`` -- replication masks project
+        as unions, see ``Hypergraph.contract`` -- and because a fine edge's
+        *distinct* pin-mask set equals its coarse image's, per-edge lambdas
+        carry over verbatim: surviving edges reuse the coarse lambda, the
+        dropped ones (single coarse pin) are 1 (0 if empty).  That skips
+        the subset-order scan, the dominant term of a from-masks build; the
+        uncov table itself is rebuilt blockwise (memory-bounded).
+
+        The result is *bit-identical* to ``PartitionState(hg, P,
+        masks=coarse_state.masks[cmap])`` -- same uncov, lambdas, cost and
+        loads (property-tested by ``tests/test_multilevel.py``), which is
+        the cost-exactness contract of the multilevel V-cycle: projection
+        changes the level, never the cost.
+        """
+        cmap = np.asarray(cmap, dtype=np.int64)
+        edge_map = np.asarray(edge_map, dtype=np.int64)
+        masks = coarse_state.masks[cmap]
+        m = len(hg.edges)
+        lam = np.zeros(m, dtype=np.int16)
+        kept = edge_map >= 0
+        coarse_lam = (coarse_state.edge_lambda if coarse_state.backend ==
+                      "numpy" else np.asarray(coarse_state._lam_l,
+                                              dtype=np.int16))
+        lam[kept] = coarse_lam[edge_map[kept]]
+        # dropped non-empty edges sit inside one coarse node: every pin
+        # shares that node's mask, so lambda is 1 (0 when unassigned)
+        dropped = np.flatnonzero(~kept & (hg.xpins[1:] > hg.xpins[:-1]))
+        if len(dropped):
+            lam[dropped] = (masks[hg.pins[hg.xpins[dropped]]] != 0)
+        return cls(hg, P, masks=masks, lambda_hint=lam)
 
     # ---------------------------------------------------------------- lambdas
     def _lambda_rows(self, rows: np.ndarray) -> np.ndarray:

@@ -53,8 +53,13 @@ class HeuristicResult:
     cost: float
 
 
-def _greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator) -> np.ndarray:
-    """BFS-grow partitions over the pin-adjacency, balanced by weight."""
+def greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator) -> np.ndarray:
+    """BFS-grow partitions over the pin-adjacency, balanced by weight.
+
+    Stage entry point: the flat heuristic seeds every restart with it, the
+    multilevel V-cycle (``multilevel.py``) only ever runs it at the
+    coarsest level.
+    """
     cap_target = float(hg.omega.sum()) / P  # aim for perfect balance
     xadj, adj = hg.xadj, hg.adj_nodes
     visited = np.zeros(hg.n, dtype=bool)
@@ -96,11 +101,15 @@ def _greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator
     return (1 << part).astype(np.int64)
 
 
-def _fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
-               rng: np.random.Generator, passes: int = 6,
-               state: PartitionState | None = None,
-               frontier: str | None = None) -> np.ndarray:
+def fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
+              rng: np.random.Generator, passes: int = 6,
+              state: PartitionState | None = None,
+              frontier: str | None = None) -> np.ndarray:
     """Move-based refinement (single-assignment masks), engine-backed.
+
+    Stage entry point, independently callable with externally supplied
+    masks or a live ``PartitionState`` (the multilevel V-cycle hands it
+    the state built from projected masks at every level).
 
     Default path: a frontier ``GainCache`` prices the whole node front in
     one batched call per pass and thereafter only nodes adjacent to an
@@ -129,15 +138,44 @@ def _fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
                 break
         masks[:] = st.masks
         return masks
-    from ..frontier import GainCache, move_candidates
-    cache = GainCache(st, move_candidates, backend=frontier)
+    from ..frontier import (GainCache, fm_move_candidates,
+                            lookahead_window, refresh_boundary_window)
+    cache = GainCache(st, fm_move_candidates, backend=frontier)
+    W = lookahead_window(st)
+    # on high-degree instances (dense coarse multilevel levels) a window
+    # refresh prices mostly nodes that get re-dirtied before their visit;
+    # lazy singleton refreshes in cache.get keep every visit O(deg * K)
+    # with no thrash.  Purely a batching choice: values stay exact either
+    # way, so decisions cannot change.
+    use_windows = len(st.pins) <= 128 * max(hg.n, 1)
+    xinc, inc_edges = st.xinc, st.inc_edges
+    elam = st.edge_lambda  # updated in place by apply/undo
+    # boundary filter (exact at visit time, mirrors the per-node rescan):
+    # if every incident edge has lambda <= 1, each one is covered by a
+    # single processor every pin of it shares -- re-masking v can only
+    # raise its lambda, so no candidate is strictly improving and the node
+    # skips pricing entirely (decision-identical; interior nodes are the
+    # vast majority of a refined partition).  Boundary status can only
+    # change when a pin sharing an edge is re-masked -- the same event
+    # that dirties the gain cache -- so it is memoized per node and
+    # re-derived only after an adjacent move (``bnd_fresh``).
+    bnd = np.zeros(hg.n, dtype=bool)
+    bnd_fresh = np.zeros(hg.n, dtype=bool)
+    xadj, adj_nodes = hg.xadj, hg.adj_nodes
     for _ in range(passes):
         improved = False
-        cache.refresh_dirty()  # batch-reprice everything a move touched
         perm = rng.permutation(hg.n)
         for i, v in enumerate(perm):
-            if cache.is_dirty(v):  # lookahead: reprice the window in one go
-                cache.refresh_window(perm[i:i + 64])
+            if not bnd_fresh[v]:
+                inc = inc_edges[xinc[v]:xinc[v + 1]]
+                bnd[v] = inc.size > 0 and int(elam[inc].max()) > 1
+                bnd_fresh[v] = True
+            if not bnd[v]:
+                continue
+            if use_windows and cache.is_dirty(v):
+                # lookahead: reprice the boundary part of the window in
+                # one go (shared rule, see frontier.refresh_boundary_window)
+                refresh_boundary_window(cache, perm, i, W)
             cands, deltas = cache.get(v)
             # capacity filter at decision time (loads move on every apply;
             # cost deltas do not depend on them) -- ascending q order
@@ -151,6 +189,8 @@ def _fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
                 st.apply(v, int(cands[sel[best]]))
                 st.commit()
                 cache.invalidate_move(v)
+                bnd_fresh[adj_nodes[xadj[v]:xadj[v + 1]]] = False
+                bnd_fresh[v] = False
                 improved = True
         if not improved:
             break
@@ -177,9 +217,9 @@ def partition_heuristic(hg: Hypergraph, P: int, eps: float,
     rng = np.random.default_rng(seed)
     best_masks, best_cost = None, np.inf
     for _ in range(restarts):
-        masks = _greedy_initial(hg, P, eps, rng)
+        masks = greedy_initial(hg, P, eps, rng)
         st = PartitionState(hg, P, masks=masks)
-        _fm_refine(hg, masks, P, eps, rng, state=st, frontier=frontier)
+        fm_refine(hg, masks, P, eps, rng, state=st, frontier=frontier)
         if st.cost < best_cost:
             best_cost, best_masks = st.cost, st.masks.copy()
     return HeuristicResult(masks=best_masks, cost=float(best_cost))
@@ -194,16 +234,20 @@ def replicate_local_search(
     max_passes: int = 30,
     seed: int = 0,
     frontier: str | None = None,
+    state: PartitionState | None = None,
 ) -> HeuristicResult:
     """Add/drop replicas while the (lambda_e - 1) cost decreases.
 
     Starts from any valid assignment (typically the non-replicating optimum
     or heuristic solution, as the paper suggests for warm-starting ILPs in
-    §C.1.1).  Add-replica candidates are priced through the frontier
-    ``GainCache`` (batched, output-sensitive; ``frontier="off"`` keeps the
-    per-node engine rescan -- identical decisions, ties to the lowest
-    processor id); drops and the multi-pin edge-guided move stay on the
-    engine's scalar delta / apply+undo path.
+    §C.1.1).  Stage entry point: pass ``state`` to search on a live
+    ``PartitionState`` instead of rebuilding one from ``masks`` (the
+    multilevel V-cycle supplies the state built from projected masks; the
+    search then refines it in place).  Add-replica candidates are priced
+    through the frontier ``GainCache`` (batched, output-sensitive;
+    ``frontier="off"`` keeps the per-node engine rescan -- identical
+    decisions, ties to the lowest processor id); drops and the multi-pin
+    edge-guided move stay on the engine's scalar delta / apply+undo path.
     """
     if P > _MAX_P:  # beyond the engine's 2^P tables: scalar reference path
         from .reference import replicate_local_search_reference
@@ -212,47 +256,62 @@ def replicate_local_search(
             max_passes=max_passes, seed=seed)
         return HeuristicResult(masks=out_masks, cost=cost)
     rng = np.random.default_rng(seed)
-    st = PartitionState(hg, P, masks=np.asarray(masks, dtype=np.int64))
+    st = (state if state is not None
+          else PartitionState(hg, P, masks=np.asarray(masks, dtype=np.int64)))
     cap = capacity(hg, P, eps) + 1e-9
     xpins, pins = hg.xpins, hg.pins
     cache = None
+    W = 64
+    use_windows = len(st.pins) <= 128 * max(hg.n, 1)  # cf. fm_refine
     if frontier != "off":
-        from ..frontier import GainCache, add_replica_candidates
-        cache = GainCache(st, add_replica_candidates, backend=frontier)
+        from ..frontier import (GainCache, connected_add_candidates,
+                                lookahead_window, refresh_boundary_window)
+        cache = GainCache(st, connected_add_candidates, backend=frontier)
+        W = lookahead_window(st)
+    # memoized boundary status, invalidated through the pin-adjacency on
+    # every applied mutation (cf. fm_refine: exact at visit time)
+    bnd = np.zeros(hg.n, dtype=bool)
+    bnd_fresh = np.zeros(hg.n, dtype=bool)
+
+    def _moved(v: int) -> None:
+        if cache is not None:
+            cache.invalidate_move(v)
+        bnd_fresh[hg.adj_nodes[hg.xadj[v]:hg.xadj[v + 1]]] = False
+        bnd_fresh[v] = False
+
+    allp = np.arange(P, dtype=np.int64)
 
     def try_edge_move(ei: int) -> bool:
         """Edge-guided move: a hyperedge with lambda>=2 whose minority side
         has few pins can often be closed by replicating ALL minority pins
-        at once (single-node moves cannot improve an 8-pin hyperedge)."""
+        at once (single-node moves cannot improve an 8-pin hyperedge).
+
+        One vectorized (|e|, P) scan replaces the per-processor python
+        listcomps; the winner rule is unchanged (fewest movers, ties to
+        the lowest processor id)."""
         if st.lambda_of(ei) < 2:
             return False
         e = pins[xpins[ei]:xpins[ei + 1]]
-        # try to cover the edge with each single processor
-        best = None
-        for p in range(P):
-            movers = [int(v) for v in e if not (int(st.masks[v]) >> p) & 1]
-            if not movers:
-                continue
-            if max_replicas is not None and any(
-                    bin(int(st.masks[v])).count("1") >= max_replicas
-                    for v in movers):
-                continue
-            w = sum(hg.omega[v] for v in movers)
-            if st.loads[p] + w > cap:
-                continue
-            if best is None or len(movers) < len(best[1]):
-                best = (p, movers)
-        if best is None:
+        masks_e = st.masks[e]
+        off = ((masks_e[:, None] >> allp[None, :]) & 1) == 0   # (|e|, P)
+        cnt = off.sum(axis=0)
+        w = hg.omega[e] @ off
+        ok = (cnt > 0) & (np.asarray(st.loads) + w <= cap)
+        if max_replicas is not None:
+            at_cap = st.popcnt[masks_e] >= max_replicas
+            ok &= ~(off & at_cap[:, None]).any(axis=0)
+        if not ok.any():
             return False
-        p, movers = best
+        cnt_ok = np.where(ok, cnt, len(e) + 1)
+        p = int(np.argmin(cnt_ok))        # fewest movers, ties: lowest p
+        movers = [int(v) for v in e[off[:, p]]]
         delta = 0.0
         for v in movers:
             delta += st.apply(v, int(st.masks[v]) | (1 << p))
         if delta < -1e-12:
             st.commit()
-            if cache is not None:
-                for v in movers:
-                    cache.invalidate_move(v)
+            for v in movers:
+                _moved(v)
             return True
         st.undo(len(movers))
         return False
@@ -262,17 +321,23 @@ def replicate_local_search(
         for ei in rng.permutation(len(hg.edges)):
             if try_edge_move(int(ei)):
                 improved = True
-        if cache is not None:
-            cache.refresh_dirty()  # one batched front instead of n calls
         perm = rng.permutation(hg.n)
         for i, v in enumerate(perm):
             m = int(st.masks[v])
             k = bin(m).count("1")
+            # boundary filter for the add step (visit-time exact, mirrors
+            # fm_refine): adding a replica can only lower an edge's lambda
+            # if some incident edge has lambda >= 2, so interior nodes have
+            # no strictly improving add candidate and skip the pricing
+            if not bnd_fresh[v]:
+                inc = st.inc_edges[st.xinc[v]:st.xinc[v + 1]]
+                bnd[v] = inc.size > 0 and int(st.edge_lambda[inc].max()) > 1
+                bnd_fresh[v] = True
             # --- try adding a replica ---
-            if max_replicas is None or k < max_replicas:
+            if bnd[v] and (max_replicas is None or k < max_replicas):
                 if cache is not None:
-                    if cache.is_dirty(v):
-                        cache.refresh_window(perm[i:i + 64])
+                    if use_windows and cache.is_dirty(v):
+                        refresh_boundary_window(cache, perm, i, W)
                     cands, deltas = cache.get(v)
                     sel = [j for j in range(len(cands))
                            if st.fits(v, (int(cands[j]) ^ m).bit_length() - 1,
@@ -292,8 +357,7 @@ def replicate_local_search(
                     if sub[best] < -1e-12:
                         st.apply(v, int(cands[sel[best]]))
                         st.commit()
-                        if cache is not None:
-                            cache.invalidate_move(v)
+                        _moved(v)
                         improved = True
                         continue
             # --- try dropping a replica (free the balance slack) ---
@@ -307,8 +371,7 @@ def replicate_local_search(
                     if st.delta_drop_replica(v, p) <= 1e-12:
                         st.apply(v, m & ~(1 << p))
                         st.commit()
-                        if cache is not None:
-                            cache.invalidate_move(v)
+                        _moved(v)
                         improved = True
         if not improved:
             break
@@ -324,12 +387,17 @@ def partition_with_replication(
     time_limit: float | None = 20.0,
     seed: int = 0,
     frontier: str | None = None,
+    multilevel: bool = False,
 ):
     """End-to-end entry: returns (non_repl_result, repl_result).
 
     Small instances are solved exactly (both with and without replication,
-    i.e. the paper's base-ILP vs ILP/D or ILP/R comparison); larger ones use
-    the heuristic + replication local search.
+    i.e. the paper's base-ILP vs ILP/D or ILP/R comparison) regardless of
+    ``multilevel``; larger ones use the heuristic + replication local
+    search.  ``multilevel=True`` routes that *heuristic* path through the
+    V-cycle driver (``multilevel.partition_with_replication_multilevel``)
+    -- required for production-scale instances (n ~ 10^4-10^5), same
+    semantics as the flat search (never-worse cost, identical validity).
     """
     from .exact import exact_partition
 
@@ -338,6 +406,10 @@ def partition_with_replication(
         rep = exact_partition(hg, P, eps, mode=mode, time_limit=time_limit,
                               ub_masks=base.masks)
         return base, rep
+    if multilevel:
+        from .multilevel import partition_with_replication_multilevel
+        return partition_with_replication_multilevel(
+            hg, P, eps, mode=mode, seed=seed, frontier=frontier)
     base = partition_heuristic(hg, P, eps, seed=seed, frontier=frontier)
     max_replicas = 2 if mode == "dup" else None
     # alternate replication local search with FM passes on the primary
@@ -349,7 +421,7 @@ def partition_with_replication(
     if P > _MAX_P:
         from .reference import fm_refine_reference as _refine
     else:
-        _refine = functools.partial(_fm_refine, frontier=frontier)
+        _refine = functools.partial(fm_refine, frontier=frontier)
     for r in range(3):
         masks = best.masks.copy()
         # re-run FM treating each node's first replica as its home
@@ -365,3 +437,8 @@ def partition_with_replication(
         else:
             break
     return base, best
+
+
+# Pre-PR 4 private names of the stage entry points, kept as aliases.
+_greedy_initial = greedy_initial
+_fm_refine = fm_refine

@@ -40,7 +40,7 @@ from .bsp import EPS, INF, BspInstance  # noqa: F401  (re-exported)
 # undo-log bookkeeping.  The SR sequence itself is cross-checked the
 # other way, against the frontier's *pure* cell simulation, by
 # tests/test_frontier.py's pricing-vs-replay property test.
-from ..frontier.schedule_front import apply_sr_mutations
+from ..frontier.schedule_front import apply_sm_mutations, apply_sr_mutations
 
 
 class Schedule:
@@ -360,79 +360,43 @@ def batch_replication_pass(sched: Schedule) -> bool:
     return improved_any
 
 
-def _ensure_present_for_merge(sched: Schedule, v: int, dst: int, s: int) -> bool:
-    """Make value v usable on dst within merged superstep s, replicating
-    recursively when the producer sits in superstep s itself (paper SM).
-    Mutates sched; returns False if impossible (caller works on a copy)."""
-    if sched.present_at(v, dst, s):
-        return True
-    cs_any = min(sched.assign[v].values())
-    if cs_any <= s - 1 and s - 1 >= 0 and (v, dst) not in sched.comms:
-        src = min(sched.assign[v],
-                  key=lambda p: (sched.assign[v][p], p))
-        sched.add_comm(v, src, dst, s - 1)
-        return True
-    # must replicate v on dst at superstep s -> parents must be available too
-    if dst in sched.assign[v]:
-        return False  # computed later on dst; moving it up is out of scope
-    for u in sched.inst.dag.parents[v]:
-        if not _ensure_present_for_merge(sched, u, dst, s):
-            return False
-    sched.add_comp(v, dst, s)
-    return True
+def try_merge_with_replication(sched: Schedule, s: int) -> float | None:
+    """Price SM (merge superstep s+1 into s) on a copy.
 
-
-def try_merge_with_replication(sched: Schedule, s: int) -> Schedule | None:
-    """Attempt to merge superstep s+1 into s (SM).  Returns the improved
-    schedule copy, or None."""
+    Returns the pre-prune cost delta (the quantity both search paths rank
+    winners by; pruning after a commit only lowers it further), or None
+    when the merge is infeasible.  The mutation sequence is the shared
+    ``frontier.apply_sm_mutations``; the engine path prices the same
+    sequence purely (``frontier.price_superstep_merge``).
+    """
     if s + 1 >= sched.S:
         return None
     trial = sched.copy()
-    P = trial.inst.P
-    # handle comms at s whose value is used at s+1
-    for (v, dst), (src, t) in sorted(trial.comms.items()):
-        if t != s:
-            continue
-        uses = [x for x in trial.uses_on(v, dst)
-                if x > t and not trial.compute_sstep(v, dst) <= x]
-        if not uses or min(uses) > s + 1:
-            continue  # stays in merged superstep, delivers for >= s+2
-        if trial.assign[v].get(src, INF) <= s - 1 and s - 1 >= 0:
-            trial.move_comm(v, dst, s - 1)
-            continue
-        # replicate v (and recursively its parents) on dst
-        trial.remove_comm(v, dst)
-        if not _ensure_present_for_merge(trial, v, dst, s):
-            return None
-    # move compute s+1 -> s
-    for p in range(P):
-        for v in sorted(trial.comp[s + 1][p]):
-            trial.remove_comp(v, p)
-            if p in trial.assign[v]:
-                return None  # already replicated there during merge
-            trial.add_comp(v, p, s)
-    # move comms at s+1 -> s
-    for (v, dst), (src, t) in sorted(trial.comms.items()):
-        if t == s + 1:
-            trial.move_comm(v, dst, s)
-    trial.prune_useless_comms()
-    if trial.current_cost() < sched.current_cost() - EPS:
-        trial.compact()
-        return trial
-    return None
+    if not apply_sm_mutations(trial, s):
+        return None
+    return trial.current_cost() - sched.current_cost()
 
 
 def superstep_merge_pass(sched: Schedule) -> tuple[Schedule, bool]:
+    """SM sweep, winner rule: price every adjacent-pair merge and commit
+    the best improving candidate (ties to the smallest s), repeating until
+    dry -- the oracle mirror of the engine path's frontier-based pass."""
     improved = False
-    s = 0
-    while s < sched.S - 1:
-        out = try_merge_with_replication(sched, s)
-        if out is not None:
-            sched = out
-            improved = True
-            # stay at the same index: maybe merge further
-        else:
-            s += 1
+    while sched.S > 1:
+        best = None
+        for s in range(sched.S - 1):
+            priced = try_merge_with_replication(sched, s)
+            if priced is not None and priced < -EPS:
+                if best is None or priced < best[0]:
+                    best = (priced, s)
+        if best is None:
+            break
+        ok = apply_sm_mutations(sched, best[1])
+        assert ok, "priced SM became infeasible"
+        sched.prune_useless_comms()
+        sched.current_cost()
+        sched.compact()
+        improved = True
     return sched, improved
 
 

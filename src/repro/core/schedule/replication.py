@@ -161,65 +161,25 @@ def batch_replication_pass(sched: Schedule) -> bool:
 
 # --------------------------------------------------------- superstep merging
 
-def _ensure_present_for_merge(sched: Schedule, v: int, dst: int, s: int) -> bool:
-    """Make value v usable on dst within merged superstep s, replicating
-    recursively when the producer sits in superstep s itself (paper SM).
-    Mutates sched; returns False if impossible (caller rolls back)."""
-    if sched.present_at(v, dst, s):
-        return True
-    cs_any = min(sched.assign[v].values())
-    if cs_any <= s - 1 and s - 1 >= 0 and (v, dst) not in sched.comms:
-        src = min(sched.assign[v],
-                  key=lambda p: (sched.assign[v][p], p))
-        sched.add_comm(v, src, dst, s - 1)
-        return True
-    # must replicate v on dst at superstep s -> parents must be available too
-    if dst in sched.assign[v]:
-        return False  # computed later on dst; moving it up is out of scope
-    for u in sched.inst.dag.parents[v]:
-        if not _ensure_present_for_merge(sched, u, dst, s):
-            return False
-    sched.add_comp(v, dst, s)
-    return True
-
-
 def try_merge_with_replication(sched: Schedule, s: int) -> bool:
     """Attempt to merge superstep s+1 into s (SM), in place under a
     transaction.  Commits (and compacts) on improvement, rolls back
-    otherwise; returns whether the merge was kept."""
+    otherwise; returns whether the merge was kept.
+
+    First-improvement comparator path (``use_fronts=False``), post-prune
+    accept; the mutation sequence itself lives in
+    ``frontier.apply_sm_mutations``, shared with the winner-rule path and
+    the oracle.
+    """
+    from ..frontier import apply_sm_mutations
+
     if s + 1 >= sched.S:
         return False
-    P = sched.inst.P
     before = sched.current_cost()
     sched.begin()
-    # handle comms at s whose value is used at s+1
-    for (v, dst), (src, t) in sorted(sched.comms.items()):
-        if t != s:
-            continue
-        uses = [x for x in sched.uses_on(v, dst)
-                if x > t and not sched.compute_sstep(v, dst) <= x]
-        if not uses or min(uses) > s + 1:
-            continue  # stays in merged superstep, delivers for >= s+2
-        if sched.assign[v].get(src, INF) <= s - 1 and s - 1 >= 0:
-            sched.move_comm(v, dst, s - 1)
-            continue
-        # replicate v (and recursively its parents) on dst
-        sched.remove_comm(v, dst)
-        if not _ensure_present_for_merge(sched, v, dst, s):
-            sched.rollback()
-            return False
-    # move compute s+1 -> s
-    for p in range(P):
-        for v in sorted(sched.comp[s + 1][p]):
-            sched.remove_comp(v, p)
-            if p in sched.assign[v]:
-                sched.rollback()
-                return False  # already replicated there during merge
-            sched.add_comp(v, p, s)
-    # move comms at s+1 -> s
-    for (v, dst), (src, t) in sorted(sched.comms.items()):
-        if t == s + 1:
-            sched.move_comm(v, dst, s)
+    if not apply_sm_mutations(sched, s):
+        sched.rollback()
+        return False
     sched.prune_useless_comms()
     if sched.current_cost() < before - EPS:
         sched.commit()
@@ -229,15 +189,51 @@ def try_merge_with_replication(sched: Schedule, s: int) -> bool:
     return False
 
 
-def superstep_merge_pass(sched: Schedule) -> tuple[Schedule, bool]:
+def superstep_merge_pass(sched: Schedule,
+                         use_fronts: bool = True) -> tuple[Schedule, bool]:
+    """SM sweep over adjacent superstep pairs.
+
+    Default path: price every candidate merge *purely*
+    (``frontier.price_superstep_merge`` -- failed or losing candidates
+    never touch the undo log) and commit **the winner** -- minimal
+    pre-prune delta, ties to the smallest s -- through the transaction
+    machinery, repeating until no candidate improves.  The oracle
+    (``reference.superstep_merge_pass``) applies the same winner rule, so
+    trajectories stay identical (bit-identical on integer weights).
+
+    ``use_fronts=False`` keeps the pre-frontier first-improvement
+    transactional sweep with its post-prune accept test (benchmark
+    comparator; may visit a different local optimum).
+    """
     improved = False
-    s = 0
-    while s < sched.S - 1:
-        if try_merge_with_replication(sched, s):
-            improved = True
-            # stay at the same index: maybe merge further
-        else:
-            s += 1
+    if not use_fronts:
+        s = 0
+        while s < sched.S - 1:
+            if try_merge_with_replication(sched, s):
+                improved = True
+                # stay at the same index: maybe merge further
+            else:
+                s += 1
+        return sched, improved
+    from ..frontier import (commit_superstep_merge, price_superstep_merge,
+                            sm_front)
+    while sched.S > 1:
+        # one comm sort per round, bucketed by superstep, shared by every
+        # candidate pricing (identical iteration to the inline sort)
+        by_t: dict[int, list] = {}
+        for kv in sorted(sched.comms.items()):
+            by_t.setdefault(kv[1][1], []).append(kv)
+        best = None
+        for s in sm_front(sched):
+            priced = price_superstep_merge(
+                sched, s, comms_at=(by_t.get(s, []), by_t.get(s + 1, [])))
+            if priced is not None and priced < -EPS:
+                if best is None or priced < best[0]:
+                    best = (priced, s)
+        if best is None:
+            break
+        commit_superstep_merge(sched, best[1])
+        improved = True
     return sched, improved
 
 
@@ -362,7 +358,8 @@ def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> 
         # would otherwise exploit (ablations show SM is the bigger lever,
         # cf. paper Table 14)
         if opts.superstep_merging:
-            sched, imp = superstep_merge_pass(sched)
+            sched, imp = superstep_merge_pass(sched,
+                                              use_fronts=opts.use_fronts)
             improved |= imp
         if opts.batch_replication:
             improved |= batch_replication_pass(sched)

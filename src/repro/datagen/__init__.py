@@ -3,5 +3,5 @@ from .dags import (cg_dag, hdb_dataset, iterated_matmul_dag, knn_dag,
                    sptrsv_dataset, tiny_dataset)
 from .moe_traces import (moe_dataset, synthetic_trace, trace_to_moe2,
                          trace_to_moe8)
-from .spmv import (fine_grained_hypergraph, row_net_hypergraph, spmv_dataset,
-                   synthetic_sparse_matrix)
+from .spmv import (fine_grained_hypergraph, large_row_net,
+                   row_net_hypergraph, spmv_dataset, synthetic_sparse_matrix)

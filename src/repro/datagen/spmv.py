@@ -69,6 +69,64 @@ def row_net_hypergraph(nz: list[tuple[int, int]], n_cols: int,
     return Hypergraph(n=n_cols, edges=edges, omega=omega, name=name).remove_isolated()
 
 
+def large_row_net(n: int, seed: int = 0, band: int = 3,
+                  fill_per_row: float = 2.0, n_dense: int = 2,
+                  dense_len: int = 256,
+                  name: str | None = None) -> Hypergraph:
+    """Streaming row-net generator for multilevel-scale instances.
+
+    ``synthetic_sparse_matrix`` materializes a python set of (i, j) pairs
+    and its ``fill`` fraction scales with n^2 -- at n = 65536 that is tens
+    of millions of python tuples before the hypergraph even exists.  This
+    generator keeps the same structural mix (band + random fill + a few
+    dense rows/columns) but parameterized *per row* (``fill_per_row``
+    non-zeros of random fill per row, dense rows/columns capped at
+    ``dense_len``), and builds everything as flat numpy coordinate arrays:
+    dedup via one ``np.unique`` over i*n + j, edges via one sort + split.
+    n = 65536 builds in a couple of seconds; n and seed are the knobs the
+    scale benchmarks sweep.
+    """
+    rng = np.random.default_rng(seed)
+    coords = []
+    # banded structure, each diagonal kept with prob 0.7 (as the seed gen)
+    for off in range(-band, band + 1):
+        i = np.arange(max(0, -off), min(n, n - off), dtype=np.int64)
+        i = i[rng.random(len(i)) < 0.7]
+        coords.append(np.stack([i, i + off]))
+    # random fill (irregular coupling), ~fill_per_row nz per row
+    n_fill = int(fill_per_row * n)
+    coords.append(np.stack([rng.integers(0, n, size=n_fill, dtype=np.int64),
+                            rng.integers(0, n, size=n_fill, dtype=np.int64)]))
+    # a few dense rows/columns (constraints, hubs), capped length
+    k = max(2, min(dense_len, n // 6))
+    for _ in range(n_dense):
+        r = int(rng.integers(0, n))
+        cols = rng.choice(n, size=k, replace=False).astype(np.int64)
+        coords.append(np.stack([np.full(k, r, dtype=np.int64), cols]))
+        c = int(rng.integers(0, n))
+        rows_d = rng.choice(n, size=k, replace=False).astype(np.int64)
+        coords.append(np.stack([rows_d, np.full(k, c, dtype=np.int64)]))
+    ij = np.concatenate(coords, axis=1)
+    flat = np.unique(ij[0] * np.int64(n) + ij[1])   # dedup + row-major sort
+    i_arr, j_arr = flat // n, flat % n
+    # row-net model: nodes = columns (weight = nnz), edges = rows with >= 2
+    # distinct columns; isolated columns dropped (cf. row_net_hypergraph)
+    col_nnz = np.bincount(j_arr, minlength=n)
+    row_len = np.bincount(i_arr, minlength=n)
+    keep = row_len[i_arr] >= 2
+    i_arr, j_arr = i_arr[keep], j_arr[keep]
+    used = np.unique(j_arr)   # columns appearing in some kept edge
+    remap = np.zeros(n, dtype=np.int64)
+    remap[used] = np.arange(len(used), dtype=np.int64)
+    j_arr = remap[j_arr]
+    splits = np.flatnonzero(i_arr[1:] != i_arr[:-1]) + 1
+    edges = [tuple(seg.tolist()) for seg in np.split(j_arr, splits)
+             if len(seg)]
+    omega = np.maximum(col_nnz[used], 1.0).astype(np.float64)
+    return Hypergraph(n=len(used), edges=edges, omega=omega,
+                      name=name or f"spmv_rn_large_{n}", presorted=True)
+
+
 def spmv_dataset(kind: str = "fg", count: int = 10, seed: int = 0,
                  sizes: tuple[int, int] = (30, 90)) -> list[Hypergraph]:
     """A dataset of `count` instances with paper-like size spread."""

@@ -277,6 +277,64 @@ def test_property_sr_pricing_equals_trial(seed):
                                for v in sched.comp[s][p1])
 
 
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_property_sm_pricing_equals_trial(seed):
+    """Pure SM pricing == the transactional trial's pre-prune cost delta,
+    including the infeasibility verdict, for every adjacent pair."""
+    from repro.core.frontier import apply_sm_mutations, price_superstep_merge
+    rng = np.random.default_rng(seed)
+    dag = random_dag(int(rng.integers(30, 80)), seed, weighted=bool(seed % 2))
+    inst = BspInstance(dag, P=int(rng.integers(2, 6)),
+                       g=float(rng.integers(1, 6)), L=float(rng.integers(0, 25)))
+    sched = bspg_schedule(inst, seed=seed)
+    for s in range(sched.S - 1):
+        priced = price_superstep_merge(sched, s)
+        before = sched.current_cost()
+        snapshot_cost = sched.cost()
+        sched.begin()
+        ok = apply_sm_mutations(sched, s)
+        actual = sched.current_cost() - before if ok else None
+        sched.rollback()
+        assert abs(sched.cost() - snapshot_cost) < 1e-9  # exact rollback
+        if priced is None:
+            assert actual is None
+        else:
+            assert actual is not None and abs(actual - priced) < 1e-9
+
+
+def test_sm_winner_pass_engine_matches_oracle():
+    """The SM winner rule must walk engine and oracle through identical
+    trajectories (same costs, shapes and replica counts)."""
+    from repro.core.schedule import reference as ref
+    from repro.core.schedule.replication import superstep_merge_pass
+    for seed in (0, 1, 2, 5):
+        dag = random_dag(90 + 10 * seed, seed)
+        inst = BspInstance(dag, P=4, g=4.0, L=20.0)
+        eng = bspg_schedule(inst, seed=seed)
+        orc = ref.bspg_schedule(inst, seed=seed)
+        assert eng.current_cost() == orc.current_cost()
+        eng, imp_e = superstep_merge_pass(eng)
+        orc, imp_o = ref.superstep_merge_pass(orc)
+        assert imp_e == imp_o
+        assert eng.current_cost() == orc.current_cost()
+        assert eng.S == orc.S
+        assert eng.comms == orc.comms
+        eng.check()
+
+
+def test_sm_winner_pass_never_increases_cost():
+    from repro.core.schedule.replication import superstep_merge_pass
+    from repro.datagen import sptrsv_dag
+    dag = sptrsv_dag(n=400, band=16, seed=0)
+    inst = BspInstance(dag, P=4, g=4.0, L=20.0)
+    sched = bspg_schedule(inst, seed=0)
+    before = sched.current_cost()
+    sched, _ = superstep_merge_pass(sched)
+    assert sched.current_cost() <= before + EPS
+    sched.check()
+
+
 def test_node_move_pass_paths_identical():
     """hill_climb with and without fronts must produce identical schedules."""
     from repro.core.schedule import hill_climb

@@ -30,10 +30,15 @@ def random_hypergraph(rng, n=None, m=None, weighted=True):
 
 
 class TestCsr:
+    # the expected incidence is derived straight from hg.edges here: the
+    # list-of-lists incident_edges() view is deprecated and the CSR arrays
+    # are the contract (it survives only as a compatibility shim, pinned
+    # by test_incident_edges_compat_view below)
     def test_csr_matches_lists(self):
         rng = np.random.default_rng(0)
         hg = random_hypergraph(rng)
-        inc = hg.incident_edges()
+        inc = [[ei for ei, e in enumerate(hg.edges) if v in e]
+               for v in range(hg.n)]
         for v in range(hg.n):
             assert hg.inc_edges[hg.xinc[v]:hg.xinc[v + 1]].tolist() == inc[v]
         for ei, e in enumerate(hg.edges):
@@ -44,10 +49,18 @@ class TestCsr:
         rng = np.random.default_rng(1)
         hg = random_hypergraph(rng)
         for v in range(hg.n):
-            want = [u for ei in hg.incident_edges()[v]
-                    for u in hg.edges[ei]]
+            want = [u for ei, e in enumerate(hg.edges) if v in e
+                    for u in e]
             got = hg.adj_nodes[hg.xadj[v]:hg.xadj[v + 1]].tolist()
             assert got == want
+
+    def test_incident_edges_compat_view(self):
+        """The deprecated list-of-lists view must stay equal to the CSR."""
+        rng = np.random.default_rng(2)
+        hg = random_hypergraph(rng)
+        assert hg.incident_edges() == [
+            hg.inc_edges[hg.xinc[v]:hg.xinc[v + 1]].tolist()
+            for v in range(hg.n)]
 
 
 class TestVectorizedCost:
