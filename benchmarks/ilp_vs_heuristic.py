@@ -6,6 +6,15 @@ by local search, see repro.core.schedule.exact), viable to ~30-45 nodes
 here; we report (a) how close the heuristic baseline is to exact, and
 (b) the exact-baseline -> replicated-heuristic reduction, the analogue of
 the paper's 12.99% / 21.08% numbers for P=2 / P=4.
+
+Each row additionally carries ``milp_lb``: the LP relaxation of an
+S-superstep BSP scheduling ILP in the spirit of the paper's §C.1.1
+formulation, solved by scipy's HiGHS backend (``optimize.milp`` with all
+integrality relaxed -- always a valid lower bound on any replicated
+schedule using at most S supersteps, the same cap the exact solver
+searches under).  Import-guarded: scipy is an optional benchmark-only
+dependency; tier-1 never touches it, and rows degrade to ``None`` when it
+is absent.
 """
 from __future__ import annotations
 
@@ -22,6 +31,96 @@ from repro.datagen import tiny_dataset
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 
 
+def bsp_schedule_lb(inst: BspInstance, S: int = 3) -> float | None:
+    """LP lower bound on any (replicated) BSP schedule with at most S
+    supersteps.
+
+    Variables (all relaxed to [0, 1]): ``x[v,p,s]`` -- v computed on p in
+    superstep s; ``c[v,p,s]`` -- v's value received by p in superstep s;
+    ``z[s]`` -- superstep s has a communication phase; plus continuous
+    ``w[s]`` (work max) and ``h[s]`` (h-relation).  Constraints: every
+    value computed somewhere; precedence (a compute needs each parent
+    computed on the same processor by s or received before s); comm
+    sources (a received value was computed somewhere else by s); per-
+    processor work and recv loads under ``w``/``h``; total sent volume
+    under ``P * h`` (the sender identity is relaxed away); any comm forces
+    ``z``.  Every valid schedule induces a feasible 0/1 point of this
+    system with objective equal to its true cost except that ``h`` under-
+    approximates max(sent, recv) -- so the LP optimum is a lower bound.
+    Returns ``None`` when scipy is unavailable or HiGHS fails.
+    """
+    try:
+        from scipy import sparse
+        from scipy.optimize import Bounds, LinearConstraint, milp
+    except ImportError:
+        return None
+    dag, P = inst.dag, inst.P
+    n = dag.n
+    nx = n * P * S          # x block
+    nzv = nx + n * P * S    # c block ends here
+    # variable layout: x | c | z(S) | w(S) | h(S)
+    def xi(v, p, s):
+        return (v * P + p) * S + s
+
+    def ci(v, p, s):
+        return nx + (v * P + p) * S + s
+
+    zi0, wi0, hi0 = nzv, nzv + S, nzv + 2 * S
+    nvar = nzv + 3 * S
+    rows, cols, vals, lb, ub = [], [], [], [], []
+    r = 0
+
+    def add(entries, lo, hi):
+        nonlocal r
+        for j, a in entries:
+            rows.append(r)
+            cols.append(j)
+            vals.append(a)
+        lb.append(lo)
+        ub.append(hi)
+        r += 1
+
+    inf = np.inf
+    for v in range(n):      # computed somewhere (replication: >= 1)
+        add([(xi(v, p, s), 1.0) for p in range(P) for s in range(S)],
+            1.0, inf)
+    for v in range(n):      # precedence + comm source + latency link
+        for p in range(P):
+            for s in range(S):
+                for u in dag.parents[v]:
+                    ent = [(xi(v, p, s), 1.0)]
+                    ent += [(xi(u, p, t), -1.0) for t in range(s + 1)]
+                    ent += [(ci(u, p, t), -1.0) for t in range(s)]
+                    add(ent, -inf, 0.0)
+                ent = [(ci(v, p, s), 1.0)]
+                ent += [(xi(v, q, t), -1.0) for q in range(P) if q != p
+                        for t in range(s + 1)]
+                add(ent, -inf, 0.0)
+                add([(ci(v, p, s), 1.0), (zi0 + s, -1.0)], -inf, 0.0)
+    for s in range(S):
+        for p in range(P):  # loads
+            add([(xi(v, p, s), float(dag.omega[v])) for v in range(n)]
+                + [(wi0 + s, -1.0)], -inf, 0.0)
+            add([(ci(v, p, s), float(dag.mu[v])) for v in range(n)]
+                + [(hi0 + s, -1.0)], -inf, 0.0)
+        add([(ci(v, p, s), float(dag.mu[v])) for v in range(n)
+             for p in range(P)] + [(hi0 + s, -float(P))], -inf, 0.0)
+    A = sparse.csr_matrix((vals, (rows, cols)), shape=(r, nvar))
+    obj = np.zeros(nvar)
+    obj[zi0:zi0 + S] = inst.L
+    obj[wi0:wi0 + S] = 1.0
+    obj[hi0:hi0 + S] = inst.g
+    var_ub = np.ones(nvar)
+    var_ub[wi0:] = np.inf
+    res = milp(c=obj,
+               constraints=LinearConstraint(A, np.asarray(lb), np.asarray(ub)),
+               bounds=Bounds(np.zeros(nvar), var_ub),
+               integrality=np.zeros(nvar))
+    if not res.success:
+        return None
+    return float(res.fun)
+
+
 def run_all(ps=(2, 4), g=4.0, L=5.0):
     dags = tiny_dataset()
     if not FULL:
@@ -36,17 +135,25 @@ def run_all(ps=(2, 4), g=4.0, L=5.0):
             ex = exact_schedule(inst, max_supersteps=3, time_limit=20.0,
                                 ub_sched=heur)
             rep = best_replicated_schedule(inst, baseline=ex.schedule)
+            lb = bsp_schedule_lb(inst, S=3)
             rows.append({
                 "dag": dag.name, "n": dag.n,
                 "exact_base": ex.cost,
                 "heuristic_base": heur.current_cost(),
                 "replicated": rep.current_cost(),
                 "assignments_optimal": ex.assignments_optimal,
+                # HiGHS LP bound over the same <= 3-superstep space the
+                # exact solver searches; None when scipy is absent
+                "milp_lb": lb,
+                "lb_consistent": None if lb is None
+                else bool(lb <= ex.cost + 1e-6),
             })
         ratios = [r["replicated"] / r["exact_base"] for r in rows
                   if r["exact_base"] > 0]
         gap = [r["heuristic_base"] / r["exact_base"] for r in rows
                if r["exact_base"] > 0]
+        lb_gaps = [r["exact_base"] / r["milp_lb"] for r in rows
+                   if r["milp_lb"] and r["exact_base"] > 0]
         out[f"P={P}"] = {
             "mean_reduction_pct":
                 (1 - float(np.exp(np.mean(np.log(np.minimum(ratios, 1.0))))))
@@ -54,6 +161,10 @@ def run_all(ps=(2, 4), g=4.0, L=5.0):
             "heuristic_gap_pct":
                 (float(np.exp(np.mean(np.log(gap)))) - 1) * 100,
             "optimal_count": sum(r["assignments_optimal"] for r in rows),
+            "lb_consistent_all": all(r["lb_consistent"] is not False
+                                     for r in rows),
+            "milp_lb_gap_pct": (float(np.exp(np.mean(np.log(lb_gaps)))) - 1)
+            * 100 if lb_gaps else None,
             "rows": rows,
         }
     out["seconds"] = time.time() - t0

@@ -110,6 +110,7 @@ def main() -> None:
     sched_bench = {
         "engine_scale": sched["engine"],
         "frontier_scale": sched["frontier"],
+        "multilevel_scale": sched["multilevel"],
         "cost_reduction": sched["table2"],
     }
     (pathlib.Path(__file__).resolve().parents[1]
@@ -127,6 +128,15 @@ def main() -> None:
               f"hc_speedup={row['hill_climb_speedup']:.2f}x;"
               f"adv_speedup={row['advanced_speedup']:.2f}x;"
               f"adv_cost={row['advanced_cost_front']:.0f}")
+    for row in sched["multilevel"]:
+        flat = (f"flat={row['flat_seconds']:.1f}s;"
+                f"speedup={row['speedup']:.1f}x;"
+                f"not_worse={row['cost_not_worse']};"
+                f"vcycle_not_worse={row['vcycle_not_worse']};"
+                if "flat_seconds" in row else "")
+        _emit(f"schedule_multilevel_{row['name']}", row["ml_seconds"],
+              flat + f"ml_cost={row['ml_cost']:.0f};"
+              f"S={row['ml_supersteps']};replicas={row['ml_replicas']}")
 
     # ---- exact vs heuristic (paper §C.2.2) -------------------------------
     ex = ilp_vs_heuristic.run_all()

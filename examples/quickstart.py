@@ -15,6 +15,17 @@ Multilevel partitioning path (PR 4):
 runs the V-cycle partitioner (coarsen -> coarsest solve -> project ->
 refine -> replicate) on a streaming spmv row-net instance and prints the
 per-level cost trajectory plus the flat-heuristic comparison.
+
+Multilevel scheduling path (PR 5):
+
+    PYTHONPATH=src python examples/quickstart.py --multilevel-schedule
+        [--n 20000]
+
+runs the acyclic-coarsening scheduling V-cycle (funnel/same-level
+clustering -> coarse replicated solve -> schedule projection ->
+frontier-priced refinement) on a streaming sptrsv DAG and prints the
+per-level cost trajectory; at sizes where the flat path is tractable it
+also prints the comparison.
 """
 import argparse
 import pathlib
@@ -61,6 +72,34 @@ def multilevel_demo(n: int, P: int = 8, eps: float = 0.05) -> None:
               f"(multilevel {'<=' if base.cost <= flat.cost else '>'} flat)")
 
 
+def multilevel_schedule_demo(n: int, P: int = 8, g: float = 4.0,
+                             L: float = 20.0) -> None:
+    """Schedule a production-scale sptrsv DAG with the multilevel V-cycle."""
+    from repro.core.schedule import BspInstance, best_replicated_schedule
+    from repro.datagen import large_sptrsv_dag
+
+    dag = large_sptrsv_dag(n, band=48, seed=0)
+    print(f"multilevel schedule: {dag.name} n={dag.n} "
+          f"edges={dag.num_edges} P={P} g={g} L={L}")
+    stats: list = []
+    t0 = time.perf_counter()
+    sched = best_replicated_schedule(BspInstance(dag, P=P, g=g, L=L),
+                                     seed=0, multilevel=True, stats=stats)
+    dt = time.perf_counter() - t0
+    for row in stats:
+        if "level" in row:
+            print(f"  level {row['level']:2d}  n={row['n']:7d}  "
+                  f"S={row['S']:4d}  projected={row['cost_projected']:.0f}  "
+                  f"refined={row['cost_refined']:.0f}")
+        else:
+            print(f"  flat guard: vcycle={row['vcycle_cost']:.0f}  "
+                  f"flat={row['flat_cost']:.0f}")
+    assert sched.validate() == []
+    repl = sum(len(a) - 1 for a in sched.assign if len(a) > 1)
+    print(f"V-cycle: cost={sched.current_cost():.0f} S={sched.S} "
+          f"replicas={repl} in {dt:.1f}s")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -70,12 +109,18 @@ def main() -> None:
     ap.add_argument("--full-135m", action="store_true")
     ap.add_argument("--multilevel", action="store_true",
                     help="run the multilevel V-cycle partitioning demo")
-    ap.add_argument("--n", type=int, default=8192,
-                    help="instance size for --multilevel")
+    ap.add_argument("--multilevel-schedule", action="store_true",
+                    help="run the multilevel DAG-scheduling demo")
+    ap.add_argument("--n", type=int, default=None,
+                    help="instance size for --multilevel[-schedule] "
+                         "(defaults: 8192 / 20000)")
     args = ap.parse_args()
 
     if args.multilevel:
-        multilevel_demo(args.n)
+        multilevel_demo(args.n or 8192)
+        return
+    if args.multilevel_schedule:
+        multilevel_schedule_demo(args.n or 20_000)
         return
 
     cfg = get_config(args.arch)

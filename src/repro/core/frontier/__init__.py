@@ -28,6 +28,7 @@ from .partition_front import (GainCache, add_replica_candidates,
 from .schedule_front import (apply_sm_mutations, apply_sr_mutations,
                              commit_superstep_merge,
                              commit_superstep_replication, node_move_targets,
+                             price_comm_moves, price_comp_moves,
                              price_node_moves, price_superstep_merge,
                              price_superstep_replication, sm_front, sr_front)
 
@@ -37,7 +38,7 @@ __all__ = [
     "lookahead_window", "move_candidates", "price_mask_front",
     "refresh_boundary_window", "set_backend",
     "apply_sm_mutations", "apply_sr_mutations", "commit_superstep_merge",
-    "commit_superstep_replication", "node_move_targets", "price_node_moves",
-    "price_superstep_merge", "price_superstep_replication", "sm_front",
-    "sr_front",
+    "commit_superstep_replication", "node_move_targets", "price_comm_moves",
+    "price_comp_moves", "price_node_moves", "price_superstep_merge",
+    "price_superstep_replication", "sm_front", "sr_front",
 ]

@@ -107,6 +107,83 @@ def price_node_moves(sched: ScheduleState, v: int) -> np.ndarray:
     return deltas
 
 
+def price_comm_moves(sched: ScheduleState, v: int, dst: int,
+                     ts) -> np.ndarray:
+    """Deltas of moving comm ``(v, dst)`` to every superstep in ``ts``.
+
+    Entry i equals ``sched.delta_move_comm(v, dst, ts[i])`` bit-for-bit:
+    the removal delta at the current superstep is computed once (scalar),
+    the insertion delta is evaluated against gathered top-2 triples for
+    the whole window in one vectorized pass -- same ``max`` structure and
+    float association as ``_comm_step_delta``.  All ``ts`` must be
+    existing supersteps; entries equal to the current superstep price 0.
+    The comm-rebalancing sweep calls this for long windows (the hot loop
+    of multilevel refinement, where windows span the whole wavefront
+    depth) and keeps the scalar path for short ones.
+    """
+    src, s = sched.comms[(v, dst)]
+    mu = sched.inst.dag.mu[v]
+    ts = np.asarray(ts, dtype=np.int64)
+    d0 = sched._comm_step_delta(s, src, dst, -mu)
+    st, rt, wt = sched._stop, sched._rtop, sched._wtop
+    srow, rrow = sched.sent, sched.recv
+    # alt = the max the changed entry competes against (``_kind_max_if``):
+    # the runner-up when the entry IS the argmax, the leader otherwise
+    s_alt = np.fromiter((st[t][2] if st[t][1] == src else st[t][0]
+                         for t in ts), dtype=np.float64, count=len(ts))
+    s_new = np.fromiter((srow[t][src] for t in ts), dtype=np.float64,
+                        count=len(ts)) + mu
+    r_alt = np.fromiter((rt[t][2] if rt[t][1] == dst else rt[t][0]
+                         for t in ts), dtype=np.float64, count=len(ts))
+    r_new = np.fromiter((rrow[t][dst] for t in ts), dtype=np.float64,
+                        count=len(ts)) + mu
+    w1 = np.fromiter((wt[t][0] for t in ts), dtype=np.float64,
+                     count=len(ts))
+    scost = np.fromiter((sched._scost[t] for t in ts), dtype=np.float64,
+                        count=len(ts))
+    h = np.maximum(np.maximum(s_alt, s_new), np.maximum(r_alt, r_new))
+    L, g = sched.inst.L, sched.inst.g
+    step = np.where(h > EPS, w1 + L + g * h, w1)
+    deltas = d0 + (step - scost)
+    deltas[ts == s] = 0.0
+    return deltas
+
+
+def price_comp_moves(sched: ScheduleState, v: int, p: int,
+                     ts) -> np.ndarray:
+    """Deltas of re-timing compute ``(v, p)`` to every superstep in ``ts``.
+
+    Entry i equals ``sched._delta_cells([("work", s, p, -omega),
+    ("work", ts[i], p, +omega)])`` bit-for-bit (the same two-cell fold the
+    scalar compute-rebalancing trial prices): the removal delta at the
+    current superstep is scalar, the insertion deltas are evaluated
+    against gathered work top-2 triples in one pass.  Entries equal to
+    the current superstep price 0.  Feasibility (parents present, uses
+    not orphaned) is the caller's concern -- see
+    ``list_sched.comp_rebalance_pass``.
+    """
+    s = sched.assign[v][p]
+    om = sched.inst.dag.omega[v]
+    ts = np.asarray(ts, dtype=np.int64)
+    w1_minus = sched._kind_max_if("work", s, p, -om)
+    d_s = sched._step_cost(w1_minus, sched.h_of(s)) - sched._scost[s]
+    wt, wrow = sched._wtop, sched.work
+    w_alt = np.fromiter((wt[t][2] if wt[t][1] == p else wt[t][0]
+                         for t in ts), dtype=np.float64, count=len(ts))
+    w_new = np.fromiter((wrow[t][p] for t in ts), dtype=np.float64,
+                        count=len(ts)) + om
+    w1 = np.maximum(w_alt, w_new)
+    h = np.fromiter((max(sched._stop[t][0], sched._rtop[t][0])
+                     for t in ts), dtype=np.float64, count=len(ts))
+    scost = np.fromiter((sched._scost[t] for t in ts), dtype=np.float64,
+                        count=len(ts))
+    L, g = sched.inst.L, sched.inst.g
+    step = np.where(h > EPS, w1 + L + g * h, w1)
+    deltas = d_s + (step - scost)
+    deltas[ts == s] = 0.0
+    return deltas
+
+
 def node_move_targets(sched: ScheduleState, v: int) -> list[bool]:
     """Feasible targets of the hill climber's node move, as P bools.
 

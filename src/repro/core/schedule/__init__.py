@@ -3,6 +3,7 @@ from .engine import ScheduleState
 from .exact import ExactScheduleResult, exact_schedule
 from .list_sched import (baseline_schedule, bspg_schedule, derive_comms,
                          hill_climb, rebalance_comms)
+from .multilevel import MultilevelScheduleOptions, multilevel_schedule
 from .replication import (AdvancedOptions, advanced_heuristic,
                           best_replicated_schedule,
                           basic_heuristic, batch_replication_pass,
@@ -14,6 +15,7 @@ __all__ = [
     "baseline_schedule", "bspg_schedule", "derive_comms", "hill_climb",
     "rebalance_comms", "AdvancedOptions", "advanced_heuristic",
     "basic_heuristic", "batch_replication_pass", "best_replicated_schedule",
+    "MultilevelScheduleOptions", "multilevel_schedule",
     "superstep_merge_pass",
     "superstep_replication_pass",
 ]

@@ -76,6 +76,40 @@ def _retop(row):
     return [m1, i1, m2]
 
 
+def canonical_comm_plan(dag, assign) -> list[tuple[int, int, int, int]]:
+    """The canonical communication set of a compute assignment, as
+    ``(value, src, dst, superstep)`` rows sorted by ``(value, dst)``.
+
+    One comm per (value, consuming processor): skipped when the consumer
+    computes the value locally in time, sourced at the earliest replica
+    (ties to the lowest processor id), placed at the latest valid
+    superstep (first use - 1).  Single home of the rule -- both
+    ``list_sched.derive_comms`` (live rebuild) and
+    ``ScheduleState.from_projection`` (bulk expansion) consume it, so the
+    two paths cannot drift.
+    """
+    first_use: dict[tuple[int, int], int] = {}
+    parents = dag.parents
+    for c in range(dag.n):
+        for p, s in assign[c].items():
+            for u in parents[c]:
+                key = (u, p)
+                t = first_use.get(key)
+                if t is None or s < t:
+                    first_use[key] = s
+    plan = []
+    for (v, p), s_use in sorted(first_use.items()):
+        av = assign[v]
+        if av.get(p, INF) <= s_use:
+            continue  # locally computed in time
+        src, s_src = min(((pp, ss) for pp, ss in av.items()),
+                         key=lambda x: (x[1], x[0]))
+        assert s_src < s_use, \
+            f"value {v} for proc {p} not producible in time"
+        plan.append((v, src, p, s_use - 1))
+    return plan
+
+
 class ScheduleState:
     """Mutable BSP schedule with O(touched-supersteps) incremental costing.
 
@@ -601,6 +635,89 @@ class ScheduleState:
         self._total = sum(self._scost)
         self.comms = {k: (src, remap[s])
                       for k, (src, s) in self.comms.items()}
+
+    # ------------------------------------------------------------ projection
+    @classmethod
+    def from_projection(cls, inst, coarse: "ScheduleState",
+                        cmap) -> "ScheduleState":
+        """Expand a coarse schedule onto the fine DAG (multilevel V-cycle).
+
+        ``cmap[v]`` is the coarse cluster of fine node v.  Every member of
+        a cluster inherits every coarse ``(processor, superstep)``
+        assignment of that cluster -- replica sets project member-wise --
+        and communications are re-derived **canonically** from the expanded
+        assignment (one comm per (value, consuming processor), sourced at
+        the earliest replica, placed at the latest valid superstep: the
+        same rule as ``list_sched.derive_comms``).  Coarse comms are *not*
+        projected: one coarse comm stands for one comm per boundary member
+        at the fine level, so re-derivation is the only canonical choice.
+
+        The load rows are rebuilt in one vectorized pass (``np.bincount``
+        per kind) whose accumulation order matches a from-scratch
+        primitive-op build (ascending node id, then sorted assignments,
+        then sorted comm keys) cell for cell, so rows, step costs, total
+        and comms are **bit-identical** to one -- property-tested by
+        ``tests/test_schedule_multilevel.py``.  (The top-2 argmax may pick
+        a different processor among *tied* maxima than the incremental
+        maintenance would; any tied index is a valid triple, and when two
+        choices exist the runner-up equals the maximum, so every delta
+        prices identically either way.)  Validity of the coarse
+        schedule implies validity of the expansion: cluster-internal
+        dependencies land in the same compute phase on the same processor,
+        cross-cluster dependencies inherit the coarse presence guarantees.
+        """
+        import numpy as np
+
+        cmap = np.asarray(cmap, dtype=np.int64)
+        dag, P = inst.dag, inst.P
+        if cmap.shape != (dag.n,):
+            raise ValueError("cmap must have shape (n,)")
+        assert coarse.inst.P == P, "fine and coarse instances disagree on P"
+        sched = cls(inst, coarse.S)
+        # per-cluster assignment lists, sorted once (deterministic order)
+        cl_items = [sorted(a.items()) for a in coarse.assign]
+        idx_w: list[int] = []
+        w_v: list[int] = []
+        assign, comp = sched.assign, sched.comp
+        for v in range(dag.n):
+            av = assign[v]
+            for p, s in cl_items[cmap[v]]:
+                av[p] = s
+                comp[s][p].add(v)
+                idx_w.append(s * P + p)
+                w_v.append(v)
+        idx_s: list[int] = []
+        idx_r: list[int] = []
+        c_v: list[int] = []
+        comms, src_index = sched.comms, sched.src_index
+        for (v, src, p, t) in canonical_comm_plan(dag, assign):
+            comms[(v, p)] = (src, t)
+            src_index[(v, src)].add(p)
+            idx_s.append(t * P + src)
+            idx_r.append(t * P + p)
+            c_v.append(v)
+        # bulk row rebuild: bincount accumulates in input order, which is
+        # exactly the sequential add_comp/add_comm order above
+        cells = coarse.S * P
+        work = np.bincount(np.asarray(idx_w, dtype=np.int64),
+                           weights=dag.omega[w_v], minlength=cells)
+        mu_c = dag.mu[c_v]
+        sent = np.bincount(np.asarray(idx_s, dtype=np.int64),
+                           weights=mu_c, minlength=cells)
+        recv = np.bincount(np.asarray(idx_r, dtype=np.int64),
+                           weights=mu_c, minlength=cells)
+        sched.work = work.reshape(coarse.S, P).tolist()
+        sched.sent = sent.reshape(coarse.S, P).tolist()
+        sched.recv = recv.reshape(coarse.S, P).tolist()
+        sched._wtop = [_retop(r) for r in sched.work]
+        sched._stop = [_retop(r) for r in sched.sent]
+        sched._rtop = [_retop(r) for r in sched.recv]
+        sched._scost = [sched._step_cost(sched._wtop[s][0],
+                                         max(sched._stop[s][0],
+                                             sched._rtop[s][0]))
+                        for s in range(sched.S)]
+        sched._total = sum(sched._scost)
+        return sched
 
     def copy(self):
         """Deep copy (undo log excluded; not allowed mid-transaction)."""

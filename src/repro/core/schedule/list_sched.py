@@ -75,26 +75,15 @@ def bspg_schedule(inst: BspInstance, seed: int = 0, slack: float = 0.15) -> Sche
 
 
 def derive_comms(sched: Schedule) -> None:
-    """(Re)build the canonical comm set for the current assignment."""
-    dag = sched.inst.dag
+    """(Re)build the canonical comm set for the current assignment (one
+    comm per (value, proc), earliest-replica source, latest valid
+    superstep -- the shared ``engine.canonical_comm_plan`` rule)."""
+    from .engine import canonical_comm_plan
+
     for (v, dst) in list(sched.comms.keys()):
         sched.remove_comm(v, dst)
-    # first use of each (value, proc) pair by compute
-    first_use: dict[tuple[int, int], int] = {}
-    for c in range(dag.n):
-        for p, s in sched.assign[c].items():
-            for u in dag.parents[c]:
-                key = (u, p)
-                if key not in first_use or s < first_use[key]:
-                    first_use[key] = s
-    for (v, p), s_use in sorted(first_use.items()):
-        if sched.compute_sstep(v, p) <= s_use:
-            continue  # locally computed in time
-        # source: the replica computed earliest
-        src, s_src = min(((pp, ss) for pp, ss in sched.assign[v].items()),
-                         key=lambda x: (x[1], x[0]))
-        assert s_src < s_use, f"value {v} for proc {p} not producible in time"
-        sched.add_comm(v, src, p, s_use - 1)
+    for (v, src, p, t) in canonical_comm_plan(sched.inst.dag, sched.assign):
+        sched.add_comm(v, src, p, t)
 
 
 # --------------------------------------------------------------------------
@@ -109,8 +98,40 @@ def _comm_window(sched: Schedule, v: int, dst: int) -> tuple[int, int]:
     return lo, hi
 
 
-def rebalance_comms(sched: Schedule, max_passes: int = 4) -> bool:
-    """Move each comm within its window to the cheapest superstep."""
+_COMM_FRONT_MIN_WINDOW = 12
+
+
+def _best_window_move(sched, s: int, lo: int, hi: int, deltas,
+                      scalar_delta) -> tuple[int, float]:
+    """Shared argmin rule of the window-rebalancing sweeps: ascending t,
+    skip the current superstep, accept only strict EPS improvements over
+    the running best (ties to the earliest superstep).  ``deltas`` is the
+    batched front (or None for the scalar path, pricing via
+    ``scalar_delta(t)``) -- one home for the decision rule keeps the two
+    paths identical by construction."""
+    best_s, best_d = s, 0.0
+    for t in range(lo, hi + 1):
+        if t == s:
+            continue
+        d = deltas[t - lo] if deltas is not None else scalar_delta(t)
+        if d < best_d - EPS:
+            best_d, best_s = d, t
+    return best_s, best_d
+
+
+def rebalance_comms(sched: Schedule, max_passes: int = 4,
+                    use_fronts: bool = True) -> bool:
+    """Move each comm within its window to the cheapest superstep.
+
+    Long windows (at least ``_COMM_FRONT_MIN_WINDOW`` supersteps -- the
+    common case after multilevel projection, where a value's producer and
+    first use can sit a whole wavefront apart) price through the batched
+    ``frontier.price_comm_moves`` front, bit-equal to per-superstep
+    ``delta_move_comm``; short windows keep the scalar loop (numpy
+    dispatch would dominate).  Decisions are identical on both paths.
+    """
+    from ..frontier import price_comm_moves
+
     improved_any = False
     for _ in range(max_passes):
         improved = False
@@ -119,15 +140,82 @@ def rebalance_comms(sched: Schedule, max_passes: int = 4) -> bool:
             lo, hi = _comm_window(sched, v, dst)
             if hi < lo:
                 continue
-            best_s, best_d = s, 0.0
-            for t in range(lo, hi + 1):
-                if t == s:
-                    continue
-                d = sched.delta_move_comm(v, dst, t)
-                if d < best_d - EPS:
-                    best_d, best_s = d, t
+            deltas = (price_comm_moves(sched, v, dst, np.arange(lo, hi + 1))
+                      if use_fronts and hi - lo + 1 >= _COMM_FRONT_MIN_WINDOW
+                      else None)
+            best_s, _ = _best_window_move(
+                sched, s, lo, hi, deltas,
+                lambda t: sched.delta_move_comm(v, dst, t))
             if best_s != s:
                 sched.move_comm(v, dst, best_s)
+                improved = improved_any = True
+        if not improved:
+            break
+    return improved_any
+
+
+def _comp_window(sched: Schedule, v: int, p: int) -> tuple[int, int]:
+    """Feasible supersteps to compute v on p, keeping everything else
+    fixed: earliest = all parents present (same-superstep local parents
+    count), latest = first use of v on p (compute uses allow the same
+    superstep, send uses require presence at the send)."""
+    lo = sched.earliest_replication(v, p)
+    if lo == INF:
+        return 1, 0
+    uses = sched.uses_on(v, p)
+    hi = min(uses) if uses else sched.S - 1
+    return int(lo), min(int(hi), sched.S - 1)
+
+
+def comp_rebalance_pass(sched: Schedule, max_passes: int = 4,
+                        use_fronts: bool = True) -> bool:
+    """Re-time each single-assigned node within its feasible superstep
+    window on its own processor (work-max balancing across supersteps).
+
+    The complement of ``rebalance_comms`` for the compute phase: the
+    multilevel projection inherits the coarse superstep structure, which
+    packs cluster chains into few supersteps -- same-superstep node moves
+    cannot spread them (a chain member's parent is computed in the same
+    superstep, so no other processor can host it), but sliding the chain
+    tail into later slack and iterating unrolls it across supersteps.
+    Windows price through the batched ``frontier.price_comp_moves`` when
+    long, the scalar two-cell ``_delta_cells`` fold otherwise -- bit-equal,
+    so both paths take identical decisions.  Only strictly improving
+    re-timings are applied.
+
+    Passes alternate traversal direction: reverse topological order first
+    (a node is visited before its parents, so a chain pushed into later
+    slack unrolls end-to-end within ONE pass -- each member's window has
+    already been extended by its successor's move), then forward (pulling
+    chains into earlier slack), and so on.
+    """
+    from ..frontier import price_comp_moves
+
+    improved_any = False
+    dag = sched.inst.dag
+    topo = dag.topo_order()
+    for pno in range(max_passes):
+        improved = False
+        for v in (reversed(topo) if pno % 2 == 0 else topo):
+            if len(sched.assign[v]) != 1:
+                continue
+            (p, s), = sched.assign[v].items()
+            if (v, p) in sched.comms:
+                continue  # compute + incoming comm on one proc: out of scope
+            lo, hi = _comp_window(sched, v, p)
+            if hi <= lo and s == lo:
+                continue
+            om = dag.omega[v]
+            deltas = (price_comp_moves(sched, v, p, np.arange(lo, hi + 1))
+                      if use_fronts and hi - lo + 1 >= _COMM_FRONT_MIN_WINDOW
+                      else None)
+            best_t, _ = _best_window_move(
+                sched, s, lo, hi, deltas,
+                lambda t: sched._delta_cells([("work", s, p, -om),
+                                              ("work", t, p, om)]))
+            if best_t != s:
+                sched.remove_comp(v, p)
+                sched.add_comp(v, p, best_t)
                 improved = improved_any = True
         if not improved:
             break

@@ -1,0 +1,376 @@
+"""Multilevel DAG scheduling (acyclic V-cycle, PR 5 tentpole).
+
+The flat replication stack tops out around n ~ 6000: every heuristic pass
+walks all nodes/comms of the full DAG, and the baseline list scheduler
+builds one superstep per topological level (depth ~ n/width for the solver
+DAGs), so wall-clock grows superlinearly with n.  The paper's headline
+scheduling claim -- "a sophisticated heuristic that is also applicable to
+much larger workloads" (up to 175k-node DAGs) -- lives exactly in the
+regime this module opens: coarse-grained scheduling via **acyclic
+clustering**, the approach of Papp et al.'s multi-processor scheduling
+line of work.
+
+Pipeline (one V-cycle)::
+
+    coarsen   acyclicity-safe clustering, alternating two vectorized
+              rules over the DAG's flat edge arrays:
+                * same-level heavy-edge matching -- pair nodes at the
+                  same topological level that share a parent (score
+                  ``mu[parent]``: co-locating them deduplicates the
+                  parent's delivery) or a child (score the mean of their
+                  own ``mu``); any path strictly increases the level, so
+                  clusters of same-level nodes can never close a cycle;
+                * funnel clustering -- attach each in-degree-1 node to
+                  its unique parent's cluster (clusters grow as
+                  unique-parent trees: every external in-edge enters at
+                  the root, so a contracted cycle would imply a fine
+                  cycle through the root);
+              both under a cluster work cap (a fraction of W/P) so the
+              coarse compute phases stay balanceable.
+    contract  ``Dag.contract``: vectorized cross-edge collapse, boundary
+              ``mu`` sums, eager acyclicity validation.
+    solve     flat ``best_replicated_schedule`` (baseline list scheduling
+              + hill climbing + ``advanced_heuristic``) at the coarsest
+              level, where restarts are cheap.
+    project   ``Schedule.from_projection``: coarse ``(processor,
+              superstep)`` assignments and replica sets expand to cluster
+              members, comms re-derived canonically -- bit-identical to a
+              from-scratch build of the expanded schedule.
+    refine    per refinement stop (every ``refine_every``-th level;
+              skipped hops project through composed cluster maps): comm
+              rebalancing and node moves priced through the frontier
+              layer, then bounded rounds of the advanced heuristic's
+              winner-commit SM/BR/SR fronts.
+
+Cost safety: refinement only ever applies strictly improving moves, at or
+below ``coarsest_n`` the driver *is* the flat heuristic (exact-equality
+fallthrough), and up to ``flat_guard_n`` it additionally runs the flat
+path and keeps the cheaper schedule -- so the result is never worse than
+flat wherever both paths are tractable, by construction.  On sptrsv the
+pure V-cycle (guard disabled) beats flat outright; on replication-hungry
+psdd circuits the flat search can win its basin, which is exactly what
+the guard hedges -- both pinned by
+``tests/test_schedule_multilevel.py`` and measured at scale by
+``benchmarks/scheduling.py::multilevel_scale``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..hypergraph import Dag
+from .bsp import BspInstance, Schedule
+from .list_sched import (comp_rebalance_pass, dag_levels, node_move_pass,
+                         rebalance_comms)
+from .replication import (AdvancedOptions, advanced_heuristic,
+                          best_replicated_schedule, replica_prune_pass)
+
+
+@dataclasses.dataclass
+class MultilevelScheduleOptions:
+    """Knobs of the scheduling V-cycle (defaults tuned for sptrsv/psdd)."""
+
+    coarsest_n: int = 1536     # stop coarsening at this many nodes
+    max_levels: int = 32       # hard cap on the level stack depth
+    stagnation: float = 0.9    # stop when a round shrinks less than this
+    cluster_cap_frac: float = 0.01  # max cluster work, fraction of W/P
+    max_fanout: int = 16       # larger child/parent groups don't score pairs
+    refine_every: int = 2      # refine every k-th level (finest always)
+    hc_rounds: int = 3         # rebalance+retime+node-move rounds per stop
+    level_rounds: int = 1      # advanced-heuristic rounds per mid level
+    final_rounds: int = 4      # advanced-heuristic rounds at the finest
+    flat_guard_n: int = 8192   # up to here ALSO run the flat path, keep the
+    #                            cheaper schedule (cost-not-worse by
+    #                            construction wherever both paths are
+    #                            tractable; 0 disables the hedge)
+
+
+# --------------------------------------------------------------- coarsening
+
+def same_level_matching(dag: Dag, level: np.ndarray, max_weight: float,
+                        rng: np.random.Generator,
+                        max_fanout: int = 16) -> tuple[np.ndarray, int]:
+    """Cluster map from heavy-edge matching of same-topological-level nodes.
+
+    Pair candidates are generated in one vectorized pass over the edge
+    arrays: all ordered pairs within each node's child group (scored by the
+    shared parent's ``mu`` -- a merged pair needs the parent's value
+    delivered once, not twice) and within each node's parent group (scored
+    by the mean of the pair's own ``mu`` -- a merged pair keeps the shared
+    consumer local to both), restricted to pairs on the *same* level.
+    Groups larger than ``max_fanout`` are skipped (hub nodes would expand
+    quadratically and their pairs are weak signals anyway).  Every node's
+    best partner (max score, ties to the smallest id) feeds a greedy sweep
+    in random order pairing mutually free nodes under ``max_weight``.
+
+    Acyclicity: any directed path strictly increases the topological
+    level, so there is never a path between two same-level nodes, and a
+    cycle through the contracted graph would have to visit some cluster's
+    level twice -- impossible when every edge strictly increases it.
+    Returns ``(cmap, nc)``; stagnation (no pairs) returns the identity.
+    """
+    n = dag.n
+    src, dst = dag.edge_src, dag.edge_dst
+    xch = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(src, minlength=n), out=xch[1:])
+    parts_v, parts_u, parts_w = [], [], []
+    for xg, arr, per_group_mu in ((xch, dst, True),
+                                  (dag.xpar, dag.par_arr, False)):
+        lens = np.diff(xg)
+        sel = np.flatnonzero((lens >= 2) & (lens <= max_fanout))
+        if not len(sel):
+            continue
+        L = lens[sel]
+        L2 = L * L
+        rep = np.repeat(sel, L2)
+        offs = np.arange(int(L2.sum()), dtype=np.int64)
+        offs -= np.repeat(np.cumsum(L2) - L2, L2)
+        Lr = np.repeat(L, L2)
+        base = xg[rep]
+        a = arr[base + offs // Lr]
+        b = arr[base + offs % Lr]
+        w = (np.repeat(dag.mu[sel], L2) if per_group_mu
+             else 0.5 * (dag.mu[a] + dag.mu[b]))
+        keep = (a != b) & (level[a] == level[b])
+        parts_v.append(a[keep])
+        parts_u.append(b[keep])
+        parts_w.append(w[keep])
+    pref = np.full(n, -1, dtype=np.int64)
+    if parts_v:
+        v = np.concatenate(parts_v)
+        u = np.concatenate(parts_u)
+        w = np.concatenate(parts_w)
+        if len(v):
+            key = v * n + u
+            order = np.argsort(key, kind="stable")
+            key, w = key[order], w[order]
+            first = np.ones(len(key), dtype=bool)
+            first[1:] = key[1:] != key[:-1]
+            starts = np.flatnonzero(first)
+            score = np.add.reduceat(w, starts)
+            vd, ud = key[starts] // n, key[starts] % n
+            order2 = np.lexsort((ud, -score, vd))
+            vd2 = vd[order2]
+            lead = np.ones(len(vd2), dtype=bool)
+            lead[1:] = vd2[1:] != vd2[:-1]
+            pref[vd2[lead]] = ud[order2][lead]
+    omega = dag.omega
+    match = np.full(n, -1, dtype=np.int64)
+    for v in rng.permutation(n):
+        u = pref[v]
+        if match[v] >= 0 or u < 0 or match[u] >= 0:
+            continue
+        if omega[v] + omega[u] > max_weight:
+            continue
+        match[v] = u
+        match[u] = v
+    partner = np.where(match >= 0, match, np.arange(n, dtype=np.int64))
+    rep_id = np.minimum(np.arange(n, dtype=np.int64), partner)
+    reps = np.unique(rep_id)
+    return np.searchsorted(reps, rep_id), len(reps)
+
+
+def funnel_clustering(dag: Dag, max_weight: float) -> tuple[np.ndarray, int]:
+    """Cluster map attaching in-degree-1 nodes to their unique parent.
+
+    Clusters grow as *unique-parent trees*: every attached member's only
+    in-edge comes from inside its cluster, so all external in-edges enter
+    at the root -- a cycle in the contracted graph would expand to a fine
+    path from a tree member back to its own root, i.e. a fine cycle.
+    Batch contraction is therefore acyclicity-safe.  Nodes attach in
+    topological order (a parent's root is final before its children are
+    visited), deterministically, under the ``max_weight`` work cap.
+
+    This is the depth-reducing rule (chains collapse into supernodes,
+    mirroring the elimination-tree structure of the sptrsv DAGs); the
+    same-level matching above is the width-reducing one.
+    """
+    n = dag.n
+    indeg = np.diff(dag.xpar)
+    par0 = np.full(n, -1, dtype=np.int64)
+    only = indeg == 1
+    par0[only] = dag.par_arr[dag.xpar[:-1][only]]
+    root = np.arange(n, dtype=np.int64)
+    cw = dag.omega.astype(np.float64).copy()
+    omega = dag.omega
+    for v in dag.topo_order():
+        u = par0[v]
+        if u < 0:
+            continue
+        r = root[u]
+        if cw[r] + omega[v] <= max_weight:
+            root[v] = r
+            cw[r] += omega[v]
+    reps = np.unique(root)
+    return np.searchsorted(reps, root), len(reps)
+
+
+def build_levels(dag: Dag, P: int, opts: MultilevelScheduleOptions,
+                 rng: np.random.Generator) -> tuple[list[Dag],
+                                                    list[np.ndarray]]:
+    """Coarsen until small/stagnant: ``(levels, cmaps)``.
+
+    ``levels[0]`` is the input; ``cmaps[i]`` maps ``levels[i]`` onto
+    ``levels[i + 1]``.  Rounds alternate funnel (depth) and same-level
+    matching (width); when the preferred rule stagnates the other gets a
+    try before the stack is declared final.
+    """
+    levels, cmaps = [dag], []
+    max_w = opts.cluster_cap_frac * float(dag.omega.sum()) / P
+    kind = "funnel"
+    while levels[-1].n > opts.coarsest_n and len(levels) < opts.max_levels:
+        cur = levels[-1]
+        cmap = nc = None
+        for k in (kind, "level" if kind == "funnel" else "funnel"):
+            if k == "funnel":
+                cand, nck = funnel_clustering(cur, max_w)
+            else:
+                lvl = np.asarray(dag_levels(cur), dtype=np.int64)
+                cand, nck = same_level_matching(cur, lvl, max_w, rng,
+                                                max_fanout=opts.max_fanout)
+            if nck < opts.stagnation * cur.n:
+                cmap, nc, kind = cand, nck, k
+                break
+        if cmap is None:
+            break
+        levels.append(cur.contract(cmap, nc))
+        cmaps.append(cmap)
+        kind = "level" if kind == "funnel" else "funnel"
+    return levels, cmaps
+
+
+def _compose_cmaps(cmaps: list[np.ndarray], lo: int, hi: int) -> np.ndarray:
+    """Cluster map from level ``lo`` straight onto level ``hi`` (lo < hi).
+
+    Composition is exact: expanding through the composed map equals
+    expanding level by level (each member inherits its transitive
+    cluster's assignments either way), so skipped refinement stops change
+    only where refinement runs, never what projection produces.
+    """
+    cmap = cmaps[lo]
+    for li in range(lo + 1, hi):
+        cmap = cmaps[li][cmap]
+    return cmap
+
+
+# ------------------------------------------------------------------ V-cycle
+
+def _refinement_schedule(n_levels: int, refine_every: int) -> list[int]:
+    """Level indices to refine at (every ``refine_every``-th; finest (0)
+    always included)."""
+    return sorted({0} | set(range(0, n_levels - 1, max(refine_every, 1))))
+
+
+def _refine_level(sched: Schedule, finest: bool,
+                  opts: MultilevelScheduleOptions, seed: int,
+                  adv_opts: AdvancedOptions | None = None) -> Schedule:
+    """Refine one projected level in place (never increases the cost).
+
+    Replica pruning first (the projection expands cluster-grain replicas
+    to every member; unused ones are pure work), then hill-climbing moves
+    (comm rebalancing and compute re-timing through the batched window
+    fronts, node moves through ``price_node_moves``), then bounded rounds
+    of the advanced replication heuristic (winner-commit SM/BR/SR fronts)
+    -- the same machinery the flat stack runs, scoped to the level.
+    """
+    sched.prune_useless_comms()
+    sched.compact()
+    replica_prune_pass(sched)
+    sched.prune_useless_comms()
+    for r in range(opts.hc_rounds):
+        improved = rebalance_comms(sched, max_passes=1)
+        improved |= comp_rebalance_pass(sched, max_passes=2)
+        improved |= node_move_pass(sched, seed=seed + r)
+        improved |= replica_prune_pass(sched, max_passes=1)
+        if not improved:
+            break
+    rounds = opts.final_rounds if finest else opts.level_rounds
+    if rounds > 0:
+        # caller's AdvancedOptions (pass selection, use_fronts) carry
+        # through to refinement; only the round budget is per-level
+        advanced_heuristic(sched, dataclasses.replace(
+            adv_opts or AdvancedOptions(), max_rounds=rounds))
+    else:
+        sched.prune_useless_comms()
+        sched.compact()
+    return sched
+
+
+def multilevel_schedule(inst: BspInstance,
+                        opts: MultilevelScheduleOptions | None = None,
+                        adv_opts: AdvancedOptions | None = None,
+                        seed: int = 0, baseline: Schedule | None = None,
+                        stats: list | None = None) -> Schedule:
+    """Replication-aware multilevel scheduling V-cycle.
+
+    Coarsens the DAG acyclically, solves the coarsest instance with the
+    flat ``best_replicated_schedule`` (which runs ``advanced_heuristic``
+    from both the baseline and the parallel seed), then projects and
+    refines level by level.  Reachable via
+    ``best_replicated_schedule(..., multilevel=True)``.
+
+    At or below ``coarsest_n`` (or on immediate coarsening stagnation)
+    the driver *is* the flat path -- exact-equality fallthrough, pinned
+    by tests.  Up to ``flat_guard_n`` the flat path also runs as a hedge
+    and the cheaper schedule wins (see module docstring).  ``stats``
+    (optional list) receives one row per refinement stop with
+    projected/refined costs, which is how the refinement-never-increases
+    property is tested, plus a ``flat_guard`` row when the hedge ran.
+    """
+    opts = opts or MultilevelScheduleOptions()
+    dag = inst.dag
+    if dag.n <= opts.coarsest_n:
+        return best_replicated_schedule(inst, baseline=baseline,
+                                        opts=adv_opts, seed=seed)
+    rng = np.random.default_rng(seed)
+    levels, cmaps = build_levels(dag, inst.P, opts, rng)
+    if not cmaps:  # immediate stagnation: no coarse level exists
+        return best_replicated_schedule(inst, baseline=baseline,
+                                        opts=adv_opts, seed=seed)
+    coarse_inst = BspInstance(levels[-1], inst.P, inst.g, inst.L)
+    # coarse solve: advanced heuristic from the PARALLEL seed only.  The
+    # flat best-of would often pick the sequential schedule here -- coarse
+    # mu is a boundary *sum*, so coarse comm systematically overprices the
+    # fine comm the canonical re-derivation actually pays -- and a
+    # single-superstep coarse solution is a basin no refinement move can
+    # leave (every move needs a later superstep to deliver into).
+    from .list_sched import bspg_schedule, hill_climb
+
+    par = hill_climb(bspg_schedule(coarse_inst, seed=seed), seed=seed)
+    sched = advanced_heuristic(par, adv_opts)
+    if stats is not None:
+        stats.append({"level": len(levels) - 1, "n": levels[-1].n,
+                      "S": sched.S,
+                      "cost_projected": float(sched.current_cost()),
+                      "cost_refined": float(sched.current_cost())})
+    prev = len(levels) - 1
+    for li in sorted(_refinement_schedule(len(levels), opts.refine_every),
+                     reverse=True):
+        cmap = _compose_cmaps(cmaps, li, prev)
+        li_inst = inst if li == 0 else BspInstance(levels[li], inst.P,
+                                                   inst.g, inst.L)
+        sched = Schedule.from_projection(li_inst, sched, cmap)
+        prev = li
+        projected = float(sched.current_cost())
+        _refine_level(sched, li == 0, opts, seed + li, adv_opts=adv_opts)
+        if stats is not None:
+            stats.append({"level": li, "n": levels[li].n, "S": sched.S,
+                          "cost_projected": projected,
+                          "cost_refined": float(sched.current_cost())})
+    if 0 < dag.n <= opts.flat_guard_n:
+        # hedge while the flat path is tractable: the V-cycle's reach claim
+        # lives beyond this size; below it, basin differences occasionally
+        # favor the flat search (e.g. replication-hungry psdd circuits), so
+        # run it too and keep the cheaper schedule.  Guarantees
+        # cost-not-worse wherever both paths run, at the disclosed price of
+        # one flat run.
+        flat = best_replicated_schedule(inst, baseline=baseline,
+                                        opts=adv_opts, seed=seed)
+        if stats is not None:
+            stats.append({"flat_guard": True, "n": dag.n,
+                          "flat_cost": float(flat.current_cost()),
+                          "vcycle_cost": float(sched.current_cost())})
+        if flat.current_cost() < sched.current_cost():
+            return flat
+    return sched

@@ -98,20 +98,87 @@ def basic_heuristic(sched: Schedule, max_passes: int = 50) -> Schedule:
     return sched
 
 
+def replica_prune_pass(sched: Schedule, max_passes: int = 4) -> bool:
+    """Inverse of the basic move: drop compute replicas, re-feeding their
+    consumers by a comm from another replica when needed.
+
+    The multilevel projection expands a replicated coarse cluster to a
+    replica of *every* member, many of which serve no fine-level use --
+    and no existing move ever removes a replica, so projected schedules
+    would stay stuck with the inherited replication grain.  Per replica
+    (node computed on more than one processor, sorted iteration):
+
+      * no use on that processor: remove it outright (work only drops;
+        validity cannot depend on an unused presence);
+      * otherwise price [drop compute, add one comm from the earliest
+        other replica arriving before the first use] through
+        ``_delta_cells`` and apply when strictly improving.
+
+    Repeats until a pass changes nothing (a removal can unlock its
+    neighbors').  Never touches the last remaining assignment.
+    """
+    improved_any = False
+    dag = sched.inst.dag
+    for _ in range(max_passes):
+        improved = False
+        for v in range(dag.n):
+            if len(sched.assign[v]) < 2:
+                continue
+            for p in sorted(sched.assign[v]):
+                if len(sched.assign[v]) < 2:
+                    break
+                if (v, p) in sched.comms:
+                    continue  # compute + incoming comm: out of scope
+                if sched.src_index.get((v, p)):
+                    # replica sources onward comms: dropping it would turn
+                    # them into relays (source present only by receive),
+                    # which the whole stack assumes never exist
+                    continue
+                s = sched.assign[v][p]
+                uses = sched.uses_on(v, p)
+                if not uses:
+                    sched.remove_comp(v, p)
+                    improved = improved_any = True
+                    continue
+                tf = min(uses) - 1
+                others = [(ss, pp) for pp, ss in sched.assign[v].items()
+                          if pp != p]
+                s_src, src = min(others)
+                if s_src > tf or tf < 0:
+                    continue  # no replica early enough to feed the uses
+                mu, om = dag.mu[v], dag.omega[v]
+                d = sched._delta_cells([("work", s, p, -om),
+                                        ("sent", tf, src, mu),
+                                        ("recv", tf, p, mu)])
+                if d < -EPS:
+                    sched.remove_comp(v, p)
+                    sched.add_comm(v, src, p, tf)
+                    improved = improved_any = True
+        if not improved:
+            break
+    return improved_any
+
+
 # -------------------------------------------------------- batch replication
 
 def batch_replication_pass(sched: Schedule) -> bool:
     """BR: per superstep, simultaneously remove one comm from every
     saturated send/recv side, replicating the carried values."""
     improved_any = False
+    # bucket comms by superstep once: this pass only removes comms (at the
+    # superstep being worked) and adds compute, so a bucket filtered
+    # against the live dict is exactly the inline per-iteration sort
+    by_t: dict[int, list] = {}
+    for (v, dst), (src, t) in sched.comms.items():
+        by_t.setdefault(t, []).append((v, dst, src))
     for s in range(sched.S):
+        bucket = sorted(by_t.get(s, []))
         while True:
             h = sched.h_of(s)
             if h <= EPS:
                 break
-            comms_at_s = sorted((v, dst, src)
-                                for (v, dst), (src, t) in sched.comms.items()
-                                if t == s)
+            comms_at_s = [e for e in bucket
+                          if (e[0], e[1]) in sched.comms]
             if not comms_at_s:
                 break
             sat = [("sent", p) for p in range(sched.inst.P)
@@ -322,15 +389,27 @@ def superstep_replication_pass(sched: Schedule,
 
 def best_replicated_schedule(inst, baseline: Schedule | None = None,
                              opts: "AdvancedOptions | None" = None,
-                             seed: int = 0) -> Schedule:
+                             seed: int = 0, multilevel: bool = False,
+                             ml_opts=None, stats: list | None = None) -> Schedule:
     """Run the advanced heuristic from the best non-replicating schedule AND
     from the parallel list schedule.  The latter matters when the
     non-replicating optimum degenerates to few processors (e.g. the paper's
     Appendix A.1 bipartite example, where only a parallel seed gives the
     replication moves room to work); beyond-paper addition.
+
+    ``multilevel=True`` routes through the acyclic-coarsening V-cycle
+    (``multilevel.multilevel_schedule``) instead, which takes the same
+    search to 100k-node DAGs; at or below its coarsest size that driver
+    falls through to this flat path exactly.  ``ml_opts`` forwards a
+    ``MultilevelScheduleOptions``; ``stats`` collects per-level cost rows.
     """
     from .list_sched import baseline_schedule, bspg_schedule, hill_climb
 
+    if multilevel:
+        from .multilevel import multilevel_schedule
+
+        return multilevel_schedule(inst, opts=ml_opts, adv_opts=opts,
+                                   seed=seed, baseline=baseline, stats=stats)
     if baseline is None:
         baseline = baseline_schedule(inst, seed=seed)
     cands = [advanced_heuristic(baseline.copy(), opts)]

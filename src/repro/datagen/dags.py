@@ -181,6 +181,68 @@ def psdd_dag(n_leaves: int = 200, depth: int = 14, seed: int = 0) -> Dag:
     return Dag(n=nid, edge_list=edges, name=f"psdd_{nid}")
 
 
+# ------------------------------------------------------ streaming generators
+# Flat-numpy builders for multilevel-scale instances (mirroring
+# ``spmv.large_row_net``): the per-row python loops of ``sptrsv_dag`` /
+# ``psdd_dag`` spend seconds in rng calls and tuple churn at n = 100k;
+# these draw every random decision as one vectorized batch and construct
+# the Dag through ``Dag.from_arrays`` -- n = 100k builds in well under a
+# second.  Same structural mix as the loop generators, parameterized the
+# same way; n and seed are the knobs the scale benchmarks sweep.
+
+def large_sptrsv_dag(n: int = 100_000, band: int = 48, fill: float = 0.0,
+                     seed: int = 0, p_cross: float = 0.06) -> Dag:
+    """Streaming ``sptrsv_dag``: banded strands + probabilistic second
+    in-strand edge + cross-strand couplings + optional random fill, all as
+    flat coordinate arrays."""
+    rng = np.random.default_rng(seed)
+    strands = band
+    i = np.arange(strands, n, dtype=np.int64)
+    srcs = [i - strands]
+    dsts = [i]
+    sel = i[(rng.random(len(i)) < 0.35) & (i >= 2 * strands)]
+    srcs.append(sel - 2 * strands)
+    dsts.append(sel)
+    sel = i[rng.random(len(i)) < p_cross]
+    off = rng.integers(1, strands, size=len(sel))
+    keep = sel - off >= 0
+    srcs.append(sel[keep] - off[keep])
+    dsts.append(sel[keep])
+    if fill:
+        sel = i[rng.random(len(i)) < fill]
+        j = np.floor(rng.random(len(sel)) * sel).astype(np.int64)
+        srcs.append(j)
+        dsts.append(sel)
+    return Dag.from_arrays(n, np.concatenate(srcs), np.concatenate(dsts),
+                           name=f"sptrsv_large_{n}")
+
+
+def large_psdd_dag(n_leaves: int = 25_000, depth: int = 16,
+                   seed: int = 0) -> Dag:
+    """Streaming ``psdd_dag``: the same layered sum/product circuit shape
+    (decaying layer sizes, fan-in 2 or 2-4, sources drawn from a recency
+    window), one vectorized draw per layer; duplicate (child, source)
+    picks collapse in the ``from_arrays`` dedup (slightly shrinking the
+    occasional fan-in, as ``rng.choice(replace=False)`` would avoid)."""
+    rng = np.random.default_rng(seed)
+    srcs, dsts = [], []
+    nid = n_leaves
+    per_layer = max(8, n_leaves // 2)
+    for d in range(depth):
+        layer_size = max(4, int(per_layer * (0.85 ** d)))
+        lo = max(0, nid - 3 * per_layer)
+        fanin = np.where(rng.random(layer_size) < 0.6, 2,
+                         rng.integers(2, 5, size=layer_size))
+        fanin = np.minimum(fanin, nid - lo)
+        new = np.arange(nid, nid + layer_size, dtype=np.int64)
+        dsts.append(np.repeat(new, fanin))
+        srcs.append(rng.integers(lo, nid, size=int(fanin.sum()),
+                                 dtype=np.int64))
+        nid += layer_size
+    return Dag.from_arrays(nid, np.concatenate(srcs), np.concatenate(dsts),
+                           name=f"psdd_large_{nid}")
+
+
 def hdb_dataset(scale: int = 1, seed: int = 0) -> list[Dag]:
     """Mixed hdb-like set (SpMV / CG / kNN / iterated matmul)."""
     out = [

@@ -30,10 +30,10 @@ def random_hypergraph(rng, n=None, m=None, weighted=True):
 
 
 class TestCsr:
-    # the expected incidence is derived straight from hg.edges here: the
-    # list-of-lists incident_edges() view is deprecated and the CSR arrays
-    # are the contract (it survives only as a compatibility shim, pinned
-    # by test_incident_edges_compat_view below)
+    # the expected incidence is derived straight from hg.edges: the CSR
+    # arrays (xinc/inc_edges) are the contract (the list-of-lists
+    # incident_edges() compatibility view was removed in PR 5 -- no
+    # in-repo callers since PR 4)
     def test_csr_matches_lists(self):
         rng = np.random.default_rng(0)
         hg = random_hypergraph(rng)
@@ -54,13 +54,6 @@ class TestCsr:
             got = hg.adj_nodes[hg.xadj[v]:hg.xadj[v + 1]].tolist()
             assert got == want
 
-    def test_incident_edges_compat_view(self):
-        """The deprecated list-of-lists view must stay equal to the CSR."""
-        rng = np.random.default_rng(2)
-        hg = random_hypergraph(rng)
-        assert hg.incident_edges() == [
-            hg.inc_edges[hg.xinc[v]:hg.xinc[v + 1]].tolist()
-            for v in range(hg.n)]
 
 
 class TestVectorizedCost:
