@@ -291,6 +291,155 @@ def bench_multilevel(P=8, eps=0.05, seed=0, sizes=None, flat_limit=None):
     return {"scale": rows}
 
 
+def bench_device_resident(P=4, eps=0.05, seed=0, sizes=None,
+                          interpret_row=True):
+    """Device-resident FM pass vs per-front dispatch vs numpy (PR 6).
+
+    Times one ``fm_refine`` call per variant on integer-weight row-net
+    instances: the numpy frontier (PR 3 host path), the per-front jax
+    dispatch (PR 3 jax path, forced by raising the device floor above n),
+    the whole-pass device-resident program (one host sync per committed
+    move), and -- at the smallest size only, interpret mode is slow -- the
+    Pallas find-pricing path.  All variants are decision-identical, so a
+    cost mismatch is a bug; host-sync counters come from an instrumented
+    ``run_fm`` on the same instance and land in ``BENCH_partition.json``
+    as ``device_resident`` via ``run.py``.
+
+    The ``price_*`` fields isolate the pricing deliverable: one fused
+    device scan over every candidate row of a pass vs the PR 3 per-front
+    dispatch (host row gather + one ``min_cover_lambdas`` call per
+    front) -- the fused path wins on CPU (~2.3x at n=8192, 262k rows).
+    End-to-end ``seconds_device`` still trails numpy on CPU because each
+    committed move costs a find dispatch plus an apply dispatch (the
+    one-sync contract); the commit-batching follow-up and the compiled
+    TPU path are ROADMAP open item 3.
+    """
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return {"scale": [], "available": False}
+    from repro.kernels import front_pass, gain
+
+    sizes = sizes or ((8192, 16384, 32768) if FULL else (4096, 8192))
+    # generators trim empty rows, so instances land slightly under the
+    # nominal size -- pin the attach floor below the smallest instance for
+    # the duration of the bench (the per-front variant force-raises it
+    # per size anyway)
+    floor_saved = front_pass.DEVICE_MIN_NODES
+    front_pass.DEVICE_MIN_NODES = min(min(sizes) // 2, floor_saved)
+    try:
+        rows = _device_resident_rows(sizes, P, eps, seed, interpret_row)
+    finally:
+        front_pass.DEVICE_MIN_NODES = floor_saved
+    return {"scale": rows, "available": True,
+            "kernel_cache": gain.kernel_cache_stats()}
+
+
+def _device_resident_rows(sizes, P, eps, seed, interpret_row):
+    from repro.core.partition import PartitionState
+    from repro.core.partition.cost import capacity
+    from repro.core.partition.heuristic import fm_refine, greedy_initial
+    from repro.kernels import front_pass, gain, ops
+    from repro.core.frontier import device_pass
+
+    rows = []
+    for n in sizes:
+        hg = large_row_net(n, seed=seed + n)
+        m0 = greedy_initial(hg, P, eps, np.random.default_rng(seed))
+
+        def timed(frontier, warm=False):
+            if warm:  # compile the jit shape family before the timed run
+                st = PartitionState(hg, P, masks=m0.copy())
+                fm_refine(hg, m0.copy(), P, eps, np.random.default_rng(seed),
+                          state=st, frontier=frontier)
+            st = PartitionState(hg, P, masks=m0.copy())
+            t0 = time.perf_counter()
+            fm_refine(hg, m0.copy(), P, eps, np.random.default_rng(seed),
+                      state=st, frontier=frontier)
+            return time.perf_counter() - t0, float(st.cost)
+
+        t_np, c_np = timed("numpy")
+        saved = front_pass.DEVICE_MIN_NODES
+        front_pass.DEVICE_MIN_NODES = n + 1      # force per-front dispatch
+        try:
+            t_pf, c_pf = timed("jax", warm=True)
+        finally:
+            front_pass.DEVICE_MIN_NODES = saved
+        t_dev, c_dev = timed("jax", warm=True)
+        assert c_np == c_pf == c_dev, (n, c_np, c_pf, c_dev)
+
+        # instrumented run: host syncs per committed move
+        st = PartitionState(hg, P, masks=m0.copy())
+        dev = device_pass(st, capacity(hg, P, eps) + 1e-9, backend="jax")
+        try:
+            dev.run_fm(np.random.default_rng(seed), 6)
+            # pricing microbench (the acceptance row): every candidate row
+            # of a full pass, priced by one fused device scan (what each
+            # find dispatches) vs the PR 3 per-front path (host row gather
+            # + one min_cover_lambdas call per front) over the same rows
+            all_bnd = np.ones(hg.n, dtype=bool)
+            reps = 5
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                dev._call_find(dev._find_fm, 0, 0, -1, 0, all_bnd)
+            t_fused = (time.perf_counter() - t0) / reps
+            edges_np = np.asarray(dev._blk_edge).ravel()
+            n_rows = edges_np.size
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                for lo in range(0, n_rows, dev.R_blk):
+                    rows_h = st.uncov[np.minimum(edges_np[lo:lo + dev.R_blk],
+                                                 len(hg.edges) - 1)]
+                    lam = gain.min_cover_lambdas(rows_h, st._order,
+                                                 st._order_pc)
+                    np.argmin(np.maximum(lam - 1, 0))
+            t_perfront = (time.perf_counter() - t0) / reps
+        finally:
+            dev.detach()
+        row = {
+            "n": hg.n, "edges": len(hg.edges), "pins": int(hg.num_pins),
+            "P": P, "eps": eps, "cost": c_np,
+            "seconds_numpy": t_np,
+            "seconds_perfront_jax": t_pf,
+            "seconds_device": t_dev,
+            "speedup_vs_numpy": t_np / t_dev,
+            "speedup_vs_perfront": t_pf / t_dev,
+            "syncs": dev.syncs, "commits": dev.commits,
+            "pass_scans": dev.pass_scans,
+            "front_rows": int(n_rows),
+            "price_seconds_fused": t_fused,
+            "price_seconds_perfront": t_perfront,
+            "price_speedup": t_perfront / max(t_fused, 1e-9),
+        }
+        if interpret_row and n == sizes[0]:
+            ops.force("pallas")
+            try:
+                t_pi, c_pi = timed("jax", warm=True)
+            finally:
+                ops.force(None)
+            assert c_pi == c_np, (n, c_pi, c_np)
+            row["seconds_device_pallas_interpret"] = t_pi
+        rows.append(row)
+    return rows
+
+
+def device_smoke(P=4, eps=0.1, seed=0):
+    """Small-n CI smoke (``run.py --device-smoke``): the device-resident
+    pass must reproduce the numpy path bit-exactly on every push."""
+    from repro.kernels import front_pass
+    saved = front_pass.DEVICE_MIN_NODES
+    front_pass.DEVICE_MIN_NODES = 1
+    try:
+        out = bench_device_resident(P=P, eps=eps, seed=seed, sizes=(1024,),
+                                    interpret_row=True)
+    finally:
+        front_pass.DEVICE_MIN_NODES = saved
+    for row in out["scale"]:    # cost equality is asserted inside; re-check
+        assert row["commits"] <= row["syncs"] <= (row["commits"]
+                                                 + row["pass_scans"])
+    return out
+
+
 def multilevel_smoke(P=4, eps=0.1, seed=0):
     """Small-n CI smoke: exercise the whole V-cycle path on every push.
 
@@ -315,6 +464,7 @@ def run_all():
     results["engine"] = bench_engine()
     results["frontier"] = bench_frontier()
     results["multilevel"] = bench_multilevel()
+    results["device"] = bench_device_resident()
     results["seconds"] = time.time() - t0
     return results
 
@@ -324,5 +474,7 @@ if __name__ == "__main__":
     import sys
     if "--multilevel-smoke" in sys.argv:
         print(json.dumps(multilevel_smoke(), indent=1))
+    elif "--device-smoke" in sys.argv:
+        print(json.dumps(device_smoke(), indent=1))
     else:
         print(json.dumps(run_all(), indent=1))

@@ -53,6 +53,7 @@ def main() -> None:
         "frontier_scale": part["frontier"]["scale"],
         "frontier_replication": part["frontier"]["replication"],
         "multilevel_scale": part["multilevel"]["scale"],
+        "device_resident": part["device"],
         "datasets": {
             ds: {"instances_per_sec": row["instances_per_sec"],
                  "best_cost": min((r for _, r in row["pairs"]), default=0.0)}
@@ -77,6 +78,13 @@ def main() -> None:
     _emit(f"partition_frontier_rep_n{frep['n']}", frep["seconds_numpy"],
           f"speedup_numpy={frep['speedup_numpy']:.2f}x;"
           f"rep_cost={frep['rep_cost']:.0f}")
+    for row in part["device"].get("scale", []):
+        pi = (f";pallas_interpret={row['seconds_device_pallas_interpret']:.2f}s"
+              if "seconds_device_pallas_interpret" in row else "")
+        _emit(f"partition_device_n{row['n']}", row["seconds_device"],
+              f"speedup_vs_numpy={row['speedup_vs_numpy']:.2f}x;"
+              f"speedup_vs_perfront={row['speedup_vs_perfront']:.2f}x;"
+              f"syncs={row['syncs']};commits={row['commits']}" + pi)
     for row in part["multilevel"]["scale"]:
         flat = (f"flat={row['flat_seconds']:.1f}s;"
                 f"speedup={row['speedup']:.1f}x;"
@@ -111,6 +119,7 @@ def main() -> None:
         "engine_scale": sched["engine"],
         "frontier_scale": sched["frontier"],
         "multilevel_scale": sched["multilevel"],
+        "device_resident": sched["device"],
         "cost_reduction": sched["table2"],
     }
     (pathlib.Path(__file__).resolve().parents[1]
@@ -128,6 +137,10 @@ def main() -> None:
               f"hc_speedup={row['hill_climb_speedup']:.2f}x;"
               f"adv_speedup={row['advanced_speedup']:.2f}x;"
               f"adv_cost={row['advanced_cost_front']:.0f}")
+    for row in sched["device"]:
+        _emit(f"schedule_device_{row['name']}", row["seconds_device"],
+              f"speedup_vs_numpy={row['speedup_vs_numpy']:.2f}x;"
+              f"cost={row['cost']:.0f};probe_syncs={row['probe_syncs']}")
     for row in sched["multilevel"]:
         flat = (f"flat={row['flat_seconds']:.1f}s;"
                 f"speedup={row['speedup']:.1f}x;"
@@ -162,5 +175,17 @@ def main() -> None:
               "no dry-run artifacts (run repro.launch.dryrun --all)")
 
 
+def device_smoke() -> None:
+    """``run.py --device-smoke``: CI-sized proof that the device-resident
+    pass reproduces the numpy path bit-exactly (partition and schedule)."""
+    from benchmarks import partitioning, scheduling
+    out = {"partition": partitioning.device_smoke(),
+           "schedule": scheduling.device_smoke()}
+    print(json.dumps(out, indent=1))
+
+
 if __name__ == "__main__":
-    main()
+    if "--device-smoke" in sys.argv:
+        device_smoke()
+    else:
+        main()

@@ -306,6 +306,87 @@ def multilevel_scale(P=8, g=4, L=20, sizes=None, flat_limit=None, seed=0):
     return rows
 
 
+def device_scale(P=8, g=4, L=20):
+    """Device-window pricing vs numpy on the hill climber (PR 6).
+
+    Integer-weight sptrsv/psdd instances run ``hill_climb`` with the numpy
+    pricers and with the device window pricers (``backend="jax"``); both
+    are decision-identical, so costs must match and the only deliverable
+    difference is wall-clock.  A per-instance instrumented
+    ``DeviceScheduleWindows`` records host syncs and full refreshes for
+    the ``device_resident`` rows in ``BENCH_schedule.json``.
+    """
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return []
+    from repro.core.frontier import device_windows
+
+    instances = ([("sptrsv_6000", sptrsv_dag(n=6000, band=48, seed=0)),
+                  ("psdd_2035", psdd_dag(n_leaves=500, depth=16, seed=0))]
+                 if FULL else
+                 [("sptrsv_3000", sptrsv_dag(n=3000, band=32, seed=0)),
+                  ("psdd_2035", psdd_dag(n_leaves=500, depth=16, seed=0))])
+    rows = []
+    for name, dag in instances:
+        inst = BspInstance(dag, P=P, g=float(g), L=float(L))
+        base = bspg_schedule(inst, seed=0)
+        t0 = time.perf_counter()
+        hc_np = hill_climb(base.copy(), seed=0)
+        t1 = time.perf_counter()
+        hill_climb(base.copy(), seed=0, backend="jax")  # warm the jit cache
+        t2 = time.perf_counter()
+        hc_dev = hill_climb(base.copy(), seed=0, backend="jax")
+        t3 = time.perf_counter()
+        assert hc_np.current_cost() == hc_dev.current_cost(), name
+        # instrumented sample: one full node-move pricing sweep
+        probe = base.copy()
+        win = device_windows(probe, "jax")
+        syncs = refreshes = None
+        if win is not None:
+            for v in range(0, probe.inst.dag.n, 7):
+                win.price_node_moves(v)
+            syncs, refreshes = win.syncs, win.refreshes
+        rows.append({
+            "name": name, "n": dag.n, "P": P, "g": g, "L": L,
+            "seconds_numpy": t1 - t0,
+            "seconds_device": t3 - t2,
+            "seconds_device_cold": t2 - t1,
+            "speedup_vs_numpy": (t1 - t0) / max(t3 - t2, 1e-9),
+            "cost": float(hc_np.current_cost()),
+            "probe_syncs": syncs, "probe_refreshes": refreshes,
+        })
+    return rows
+
+
+def device_smoke(P=4, g=2, L=4):
+    """Small-n CI smoke: device-window hill climbing must match numpy
+    bit-exactly on every push (floors dropped so the device path fires)."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return {"available": False}
+    from repro.kernels import front_pass
+
+    saved = (front_pass.DEVICE_MIN_WINDOW, front_pass.DEVICE_MIN_STEPS)
+    front_pass.DEVICE_MIN_WINDOW = front_pass.DEVICE_MIN_STEPS = 1
+    try:
+        rows = []
+        for n in (300, 600):
+            dag = sptrsv_dag(n=n, band=16, seed=0)
+            inst = BspInstance(dag, P=P, g=float(g), L=float(L))
+            base = bspg_schedule(inst, seed=0)
+            hc_np = hill_climb(base.copy(), seed=0)
+            hc_dev = hill_climb(base.copy(), seed=0, backend="jax")
+            assert hc_np.current_cost() == hc_dev.current_cost(), n
+            assert hc_np.comms == hc_dev.comms and \
+                hc_np.assign == hc_dev.assign, n
+            rows.append({"n": dag.n, "cost": float(hc_np.current_cost())})
+    finally:
+        front_pass.DEVICE_MIN_WINDOW, front_pass.DEVICE_MIN_STEPS = saved
+    return {"available": True, "rows": rows}
+
+
 def multilevel_smoke(P=8, g=4, L=20):
     """Small-n CI smoke: exercise the whole scheduling V-cycle on every
     push -- coarsen, coarse solve, project, refine, replica-prune -- with
@@ -340,6 +421,7 @@ def run_all():
         "engine": engine_scale(),
         "frontier": frontier_scale(),
         "multilevel": multilevel_scale(),
+        "device": device_scale(),
     }
     results["seconds"] = time.time() - t0
     return results

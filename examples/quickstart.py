@@ -26,6 +26,16 @@ clustering -> coarse replicated solve -> schedule projection ->
 frontier-priced refinement) on a streaming sptrsv DAG and prints the
 per-level cost trajectory; at sizes where the flat path is tractable it
 also prints the comparison.
+
+Device-resident refinement path (PR 6):
+
+    PYTHONPATH=src python examples/quickstart.py --device --backend jax
+        [--n 4096]
+
+runs one FM refinement pass twice -- numpy frontier vs the whole-pass
+device-resident program (`kernels/front_pass.py`: persistent jnp state,
+fused pricing, one host sync per committed move) -- and prints both
+wall-clocks, the sync/commit counters and the bit-identity check.
 """
 import argparse
 import pathlib
@@ -100,6 +110,52 @@ def multilevel_schedule_demo(n: int, P: int = 8, g: float = 4.0,
           f"replicas={repl} in {dt:.1f}s")
 
 
+def device_demo(n: int, backend: str = "jax", P: int = 4,
+                eps: float = 0.05) -> None:
+    """Run FM refinement host-side and device-resident; show bit-identity."""
+    import numpy as np
+
+    from repro.core.frontier import device_pass
+    from repro.core.partition import PartitionState
+    from repro.core.partition.cost import capacity
+    from repro.core.partition.heuristic import fm_refine, greedy_initial
+    from repro.datagen import large_row_net
+
+    hg = large_row_net(n, seed=0)
+    print(f"device demo: {hg.name} n={hg.n} edges={len(hg.edges)} "
+          f"P={P} eps={eps} backend={backend}")
+    m0 = greedy_initial(hg, P, eps, np.random.default_rng(0))
+
+    st_np = PartitionState(hg, P, masks=m0.copy())
+    t0 = time.perf_counter()
+    fm_refine(hg, m0.copy(), P, eps, np.random.default_rng(0), state=st_np,
+              frontier="numpy")
+    t_np = time.perf_counter() - t0
+    print(f"numpy frontier:   cost={st_np.cost:.0f} in {t_np:.2f}s")
+
+    st_dev = PartitionState(hg, P, masks=m0.copy())
+    dev = device_pass(st_dev, capacity(hg, P, eps) + 1e-9, backend=backend)
+    if dev is None:
+        print("device path unavailable (no jax / non-integer weights / "
+              f"n < DEVICE_MIN_NODES) -- frontier='{backend}' would fall "
+              "back to the per-front path")
+        return
+    t0 = time.perf_counter()
+    try:
+        dev.run_fm(np.random.default_rng(0), 6)
+    finally:
+        dev.detach()
+    t_dev = time.perf_counter() - t0
+    print(f"device-resident:  cost={st_dev.cost:.0f} in {t_dev:.2f}s "
+          f"(syncs={dev.syncs} commits={dev.commits} "
+          f"scans={dev.pass_scans})")
+    same = bool(np.array_equal(st_np.masks, st_dev.masks)
+                and st_np.cost == st_dev.cost)
+    print(f"bit-identical: {same} "
+          f"(<= 1 host sync per committed move + 1 terminal scan/pass)")
+    assert same
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -111,9 +167,13 @@ def main() -> None:
                     help="run the multilevel V-cycle partitioning demo")
     ap.add_argument("--multilevel-schedule", action="store_true",
                     help="run the multilevel DAG-scheduling demo")
+    ap.add_argument("--device", action="store_true",
+                    help="run the device-resident FM refinement demo")
+    ap.add_argument("--backend", default="jax",
+                    help="frontier backend for --device (default: jax)")
     ap.add_argument("--n", type=int, default=None,
-                    help="instance size for --multilevel[-schedule] "
-                         "(defaults: 8192 / 20000)")
+                    help="instance size for --multilevel[-schedule]/--device "
+                         "(defaults: 8192 / 20000 / 4096)")
     args = ap.parse_args()
 
     if args.multilevel:
@@ -121,6 +181,9 @@ def main() -> None:
         return
     if args.multilevel_schedule:
         multilevel_schedule_demo(args.n or 20_000)
+        return
+    if args.device:
+        device_demo(args.n or 4096, backend=args.backend)
         return
 
     cfg = get_config(args.arch)

@@ -21,24 +21,26 @@ pass's commit-the-winner rule, applied to engine and oracle in lockstep).
 """
 from .partition_front import (GainCache, add_replica_candidates,
                               connected_add_candidates, connected_targets,
-                              fm_move_candidates, get_backend,
+                              device_pass, fm_move_candidates, get_backend,
                               lookahead_window, move_candidates,
                               price_mask_front, refresh_boundary_window,
                               set_backend)
 from .schedule_front import (apply_sm_mutations, apply_sr_mutations,
                              commit_superstep_merge,
-                             commit_superstep_replication, node_move_targets,
-                             price_comm_moves, price_comp_moves,
-                             price_node_moves, price_superstep_merge,
+                             commit_superstep_replication, device_windows,
+                             node_move_targets, price_comm_moves,
+                             price_comp_moves, price_node_moves,
+                             price_superstep_merge,
                              price_superstep_replication, sm_front, sr_front)
 
 __all__ = [
     "GainCache", "add_replica_candidates", "connected_add_candidates",
-    "connected_targets", "fm_move_candidates", "get_backend",
+    "connected_targets", "device_pass", "fm_move_candidates", "get_backend",
     "lookahead_window", "move_candidates", "price_mask_front",
     "refresh_boundary_window", "set_backend",
     "apply_sm_mutations", "apply_sr_mutations", "commit_superstep_merge",
-    "commit_superstep_replication", "node_move_targets", "price_comm_moves",
-    "price_comp_moves", "price_node_moves", "price_superstep_merge",
-    "price_superstep_replication", "sm_front", "sr_front",
+    "commit_superstep_replication", "device_windows", "node_move_targets",
+    "price_comm_moves", "price_comp_moves", "price_node_moves",
+    "price_superstep_merge", "price_superstep_replication", "sm_front",
+    "sr_front",
 ]

@@ -64,6 +64,27 @@ def get_backend() -> str:
     return _BACKEND
 
 
+def device_pass(state: PartitionState, cap: float, backend: str | None = None,
+                **kw):
+    """Device-resident whole-pass runner for the jax backend, or None.
+
+    The PR 3 jax path ships one front to the device per priced node; the
+    PR 6 device-resident path (``kernels.front_pass``) keeps the engine
+    state on device for an entire refinement pass with one host sync per
+    committed move.  Dispatch mirrors ``_lambdas``: the explicit
+    ``frontier=`` argument wins, else the module default backend; anything
+    but ``"jax"`` -- or an instance the device pass cannot hold
+    bit-identically (too small, non-integer mu, unassigned nodes, no jax)
+    -- returns None and the caller keeps the numpy front path.
+    """
+    if backend is None:
+        backend = _BACKEND
+    if backend != "jax":
+        return None
+    from ...kernels.front_pass import attach
+    return attach(state, cap, **kw)
+
+
 def _ragged_gather(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
     """Flat indices for concatenating ``arr[starts[i]:starts[i]+lens[i]]``."""
     total = int(lens.sum())

@@ -42,6 +42,29 @@ import numpy as np
 from ..schedule.engine import EPS, INF, ScheduleState
 
 
+def device_windows(sched: ScheduleState, backend: str | None = None):
+    """Device-resident window pricer for the jax backend, or None.
+
+    Builds a ``kernels.front_pass.DeviceScheduleWindows`` mirror of the
+    schedule's per-superstep rows when the jax backend is selected (the
+    explicit argument wins, else the frontier default backend) and the
+    instance satisfies the integer contract -- integral weights and BSP
+    parameters make the fused int32 window programs bit-identical to the
+    float64 fronts here.  Anything else returns None and the caller keeps
+    the numpy pricers.
+    """
+    if backend is None:
+        from .partition_front import get_backend
+        backend = get_backend()
+    if backend != "jax":
+        return None
+    from ...kernels.front_pass import (DeviceScheduleWindows,
+                                       schedule_device_supported)
+    if not schedule_device_supported(sched):
+        return None
+    return DeviceScheduleWindows(sched)
+
+
 def price_node_moves(sched: ScheduleState, v: int) -> np.ndarray:
     """Deltas of the compound node move ``v -> q`` for every q at once.
 

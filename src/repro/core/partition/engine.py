@@ -210,6 +210,10 @@ class PartitionState:
         bits = (self.masks[:, None] >> np.arange(self.P)) & 1
         self.loads = (bits * self.omega[:, None]).sum(axis=0)
         self._undo: list[tuple[int, int, list | np.ndarray]] = []
+        # optional device mirror (kernels.front_pass.DevicePartitionPass):
+        # when attached, every numpy-backend apply/undo forwards the
+        # (v, old, new) mutation so the device buffers stay in lockstep
+        self.device = None
         if backend == "python":
             # plain-python mirrors; the numpy arrays above are build-only
             self._uncov_l = self.uncov.tolist()
@@ -424,6 +428,8 @@ class PartitionState:
         self.cost += delta
         self._shift_loads(v, old, new_mask)
         self.masks[v] = new_mask
+        if self.device is not None:
+            self.device.apply(v, old, new_mask)
         return delta
 
     def undo(self, count: int = 1) -> None:
@@ -452,6 +458,8 @@ class PartitionState:
                 self.edge_lambda[inc] = old_lams
             self._shift_loads(v, cur, old)
             self.masks[v] = old
+            if self.device is not None:
+                self.device.apply(v, cur, old)
 
     def commit(self) -> None:
         """Drop undo history (accept everything applied so far)."""

@@ -119,6 +119,20 @@ def fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
     """
     cap = capacity(hg, P, eps) + 1e-9
     st = state if state is not None else PartitionState(hg, P, masks=masks)
+    if frontier != "off":
+        # jax backend, large instance: run whole passes device-resident
+        # (one host sync per committed move; decisions bit-identical --
+        # see kernels.front_pass).  Falls through to the numpy front path
+        # whenever the device pass cannot hold the instance exactly.
+        from ..frontier.partition_front import device_pass
+        dev = device_pass(st, cap, backend=frontier)
+        if dev is not None:
+            try:
+                dev.run_fm(rng, passes)
+            finally:
+                dev.detach()
+            masks[:] = st.masks
+            return masks
     if frontier == "off":
         for _ in range(passes):
             improved = False
@@ -261,9 +275,17 @@ def replicate_local_search(
     cap = capacity(hg, P, eps) + 1e-9
     xpins, pins = hg.xpins, hg.pins
     cache = None
+    dev = None
     W = 64
     use_windows = len(st.pins) <= 128 * max(hg.n, 1)  # cf. fm_refine
     if frontier != "off":
+        # device-resident node sweep (cf. fm_refine): the edge-guided phase
+        # stays on the host engine, whose apply/undo hook keeps the device
+        # mirror synced; the add/drop sweep runs on device with one host
+        # sync per committed move
+        from ..frontier.partition_front import device_pass
+        dev = device_pass(st, cap, backend=frontier)
+    if frontier != "off" and dev is None:
         from ..frontier import (GainCache, connected_add_candidates,
                                 lookahead_window, refresh_boundary_window)
         cache = GainCache(st, connected_add_candidates, backend=frontier)
@@ -316,12 +338,8 @@ def replicate_local_search(
         st.undo(len(movers))
         return False
 
-    for _ in range(max_passes):
+    def _node_sweep(perm: np.ndarray) -> bool:
         improved = False
-        for ei in rng.permutation(len(hg.edges)):
-            if try_edge_move(int(ei)):
-                improved = True
-        perm = rng.permutation(hg.n)
         for i, v in enumerate(perm):
             m = int(st.masks[v])
             k = bin(m).count("1")
@@ -373,8 +391,26 @@ def replicate_local_search(
                         st.commit()
                         _moved(v)
                         improved = True
-        if not improved:
-            break
+        return improved
+
+    try:
+        for _ in range(max_passes):
+            improved = False
+            for ei in rng.permutation(len(hg.edges)):
+                if try_edge_move(int(ei)):
+                    improved = True
+            perm = rng.permutation(hg.n)
+            if dev is not None:
+                # device node sweep: same permutation, same decisions
+                if dev.rep_pass(perm, max_replicas):
+                    improved = True
+            elif _node_sweep(perm):
+                improved = True
+            if not improved:
+                break
+    finally:
+        if dev is not None:
+            dev.detach()
     return HeuristicResult(masks=st.masks.copy(), cost=float(st.cost))
 
 

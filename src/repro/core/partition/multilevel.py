@@ -25,7 +25,12 @@ Pipeline (one V-cycle)::
     refine   frontier-priced FM (``GainCache`` fronts) and
              ``replicate_local_search`` at each refinement stop (every
              ``refine_every``-th level; skipped hops project through
-             composed maps, which is still cost-exact)
+             composed maps, which is still cost-exact).  With
+             ``frontier="jax"`` the levels above ``DEVICE_MIN_NODES``
+             run their passes device-resident (``kernels.front_pass``,
+             one host sync per committed move, decision-identical) --
+             the ``frontier`` argument threads through unchanged, so
+             the V-cycle needs no device-specific code
 
 Cost safety: the coarsest level is solved by the *same* flat heuristic,
 projection preserves cost exactly, and every refinement stage only ever

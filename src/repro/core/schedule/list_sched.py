@@ -120,7 +120,8 @@ def _best_window_move(sched, s: int, lo: int, hi: int, deltas,
 
 
 def rebalance_comms(sched: Schedule, max_passes: int = 4,
-                    use_fronts: bool = True) -> bool:
+                    use_fronts: bool = True,
+                    backend: str | None = None) -> bool:
     """Move each comm within its window to the cheapest superstep.
 
     Long windows (at least ``_COMM_FRONT_MIN_WINDOW`` supersteps -- the
@@ -129,9 +130,14 @@ def rebalance_comms(sched: Schedule, max_passes: int = 4,
     ``frontier.price_comm_moves`` front, bit-equal to per-superstep
     ``delta_move_comm``; short windows keep the scalar loop (numpy
     dispatch would dominate).  Decisions are identical on both paths.
+    ``backend="jax"`` (on integer-weight instances) routes long windows
+    through the device-resident fused pricer (``frontier.device_windows``)
+    instead -- same deltas bit-for-bit, ``_best_window_move`` stays the
+    single decision home.
     """
-    from ..frontier import price_comm_moves
+    from ..frontier import device_windows, price_comm_moves
 
+    win = device_windows(sched, backend)
     improved_any = False
     for _ in range(max_passes):
         improved = False
@@ -140,14 +146,20 @@ def rebalance_comms(sched: Schedule, max_passes: int = 4,
             lo, hi = _comm_window(sched, v, dst)
             if hi < lo:
                 continue
-            deltas = (price_comm_moves(sched, v, dst, np.arange(lo, hi + 1))
-                      if use_fronts and hi - lo + 1 >= _COMM_FRONT_MIN_WINDOW
-                      else None)
+            if use_fronts and hi - lo + 1 >= _COMM_FRONT_MIN_WINDOW:
+                ts = np.arange(lo, hi + 1)
+                deltas = (win.price_comm_moves(v, dst, ts)
+                          if win is not None
+                          else price_comm_moves(sched, v, dst, ts))
+            else:
+                deltas = None
             best_s, _ = _best_window_move(
                 sched, s, lo, hi, deltas,
                 lambda t: sched.delta_move_comm(v, dst, t))
             if best_s != s:
                 sched.move_comm(v, dst, best_s)
+                if win is not None:
+                    win.mark_dirty()
                 improved = improved_any = True
         if not improved:
             break
@@ -168,7 +180,8 @@ def _comp_window(sched: Schedule, v: int, p: int) -> tuple[int, int]:
 
 
 def comp_rebalance_pass(sched: Schedule, max_passes: int = 4,
-                        use_fronts: bool = True) -> bool:
+                        use_fronts: bool = True,
+                        backend: str | None = None) -> bool:
     """Re-time each single-assigned node within its feasible superstep
     window on its own processor (work-max balancing across supersteps).
 
@@ -189,8 +202,9 @@ def comp_rebalance_pass(sched: Schedule, max_passes: int = 4,
     already been extended by its successor's move), then forward (pulling
     chains into earlier slack), and so on.
     """
-    from ..frontier import price_comp_moves
+    from ..frontier import device_windows, price_comp_moves
 
+    win = device_windows(sched, backend)
     improved_any = False
     dag = sched.inst.dag
     topo = dag.topo_order()
@@ -206,9 +220,12 @@ def comp_rebalance_pass(sched: Schedule, max_passes: int = 4,
             if hi <= lo and s == lo:
                 continue
             om = dag.omega[v]
-            deltas = (price_comp_moves(sched, v, p, np.arange(lo, hi + 1))
-                      if use_fronts and hi - lo + 1 >= _COMM_FRONT_MIN_WINDOW
-                      else None)
+            if use_fronts and hi - lo + 1 >= _COMM_FRONT_MIN_WINDOW:
+                ts = np.arange(lo, hi + 1)
+                deltas = (win.price_comp_moves(v, p, ts) if win is not None
+                          else price_comp_moves(sched, v, p, ts))
+            else:
+                deltas = None
             best_t, _ = _best_window_move(
                 sched, s, lo, hi, deltas,
                 lambda t: sched._delta_cells([("work", s, p, -om),
@@ -216,6 +233,8 @@ def comp_rebalance_pass(sched: Schedule, max_passes: int = 4,
             if best_t != s:
                 sched.remove_comp(v, p)
                 sched.add_comp(v, p, best_t)
+                if win is not None:
+                    win.mark_dirty()
                 improved = improved_any = True
         if not improved:
             break
@@ -244,12 +263,16 @@ def try_node_move(sched: Schedule, v: int, q: int) -> bool:
 
 
 def node_move_pass(sched: Schedule, seed: int = 0,
-                   use_fronts: bool = True) -> bool:
+                   use_fronts: bool = True,
+                   backend: str | None = None) -> bool:
     """One pass of node moves: first feasible improving target wins.
 
     Default path prices every target processor in one frontier front
     (``price_node_moves``); ``use_fronts=False`` keeps the pre-frontier
-    per-target ``try_node_move`` loop.  Both take identical decisions.
+    per-target ``try_node_move`` loop.  ``backend="jax"`` folds the move's
+    per-superstep (P x P) delta matrices on device when many supersteps
+    are touched (``frontier.device_windows``).  All paths take identical
+    decisions.
     """
     rng = np.random.default_rng(seed)
     improved = False
@@ -263,7 +286,8 @@ def node_move_pass(sched: Schedule, seed: int = 0,
                     improved = True
                     break
         return improved
-    from ..frontier import node_move_targets, price_node_moves
+    from ..frontier import device_windows, node_move_targets, price_node_moves
+    win = device_windows(sched, backend)
     for v in rng.permutation(sched.inst.dag.n):
         v = int(v)
         if len(sched.assign[v]) != 1:
@@ -276,12 +300,17 @@ def node_move_pass(sched: Schedule, seed: int = 0,
             q = feas.index(True)
             if sched.delta_node_move(v, q) < -EPS:
                 sched.apply_node_move(v, q)
+                if win is not None:
+                    win.mark_dirty()
                 improved = True
             continue
-        deltas = price_node_moves(sched, v)
+        deltas = (win.price_node_moves(v) if win is not None
+                  else price_node_moves(sched, v))
         for q in range(P):
             if feas[q] and deltas[q] < -EPS:
                 sched.apply_node_move(v, q)
+                if win is not None:
+                    win.mark_dirty()
                 improved = True
                 break
     return improved
@@ -338,12 +367,13 @@ def merge_pass(sched: Schedule) -> bool:
 
 
 def hill_climb(sched: Schedule, rounds: int = 6, seed: int = 0,
-               use_fronts: bool = True) -> Schedule:
+               use_fronts: bool = True,
+               backend: str | None = None) -> Schedule:
     for r in range(rounds):
         improved = False
-        improved |= rebalance_comms(sched)
+        improved |= rebalance_comms(sched, backend=backend)
         improved |= node_move_pass(sched, seed=seed + r,
-                                   use_fronts=use_fronts)
+                                   use_fronts=use_fronts, backend=backend)
         improved |= merge_pass(sched)
         if not improved:
             break

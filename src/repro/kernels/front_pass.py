@@ -1,0 +1,797 @@
+"""Device-resident refinement passes: whole FM / replication sweeps on JAX.
+
+PR 3 gave the frontier layer a jax backend, but it ships one front to the
+device at a time: every priced node pays a host->device round trip, so on
+CPU the jax path merely ties numpy.  This module keeps the engine's state
+resident on the device across an entire refinement pass and fuses the whole
+per-visit pipeline -- row gather, popcount-ordered masked-min lambda
+pricing, integer cost reduction, winner argmin -- into one jitted program
+that *scans* the visit permutation and stops at the first committed event.
+The host then reads back exactly one (position, kind, processor) triple per
+committed move (plus one terminal read per pass scan), applies the move to
+both the host engine and the device mirror, and re-enters the scan at the
+next position.
+
+Correctness contract (same as PR 3, property-tested in interpret mode):
+
+  * **Bit-identical decisions.**  The device program is all-integer: when
+    ``mu`` is integer-valued (every shipped instance), cost deltas are
+    exact int32, the host's float64 thresholds collapse to integer ones
+    (``delta < -1e-12``  <=>  ``delta <= -1``;  drop ``delta <= 1e-12``
+    <=>  ``delta <= 0``), and ``argmin`` picks the first minimum on both
+    sides -- so the committed trajectory equals the numpy frontier path's,
+    move for move.  Non-integer weights fall back to the per-front path.
+  * **Feasibility stays on the host.**  Capacity tests compare float64
+    loads exactly as ``PartitionState.fits`` does; the host uploads the
+    (n, P) feasibility mask (recomputing only columns whose load changed),
+    so no device float compare can flip a knife-edge decision.
+  * **One host sync per committed move.**  Each ``find`` call performs one
+    blocking device->host read; a pass with M commits issues at most M + 1
+    finds (the extra one proves the scan is dry; it is skipped when the
+    final commit lands on the last visit position).  The counters obey
+    ``commits <= syncs <= commits + pass_scans``, assertable in tests.
+
+Layout: candidate fronts are the flat (pair, edge) expansion -- for each
+visited node, P candidate masks x its incident edges -- packed into fixed
+power-of-two blocks (``R_BLK`` rows, ``R_BLK // P`` node slots, a node
+never split) that a ``lax.while_loop`` walks in visit order.  Blocks whose
+nodes are neither boundary-at-pass-start nor dirtied by a committed move
+are skipped on-device (``lax.cond``), which restores the output-sensitivity
+the numpy ``GainCache`` gets from adjacency invalidation.  The per-row
+lambda + cost-difference reduction optionally runs as the Pallas kernel
+``gain.front_dlam`` (TPU; interpret mode on CPU) under the same
+``ops._use_pallas`` switch as every other kernel in this package.
+
+The schedule side gets the same treatment at window granularity:
+``DeviceScheduleWindows`` keeps the per-superstep load rows, top-2 triples
+and step costs as persistent padded device arrays and fuses the
+``price_comm_moves`` / ``price_comp_moves`` gathers and the node-move
+(P x P) delta-matrix fold into single jitted programs (int32, same integer
+contract; float-weight instances fall back to the numpy fronts).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .gain import _NO_COVER, front_dlam
+
+# Below this node count the per-front numpy path wins (device dispatch and
+# block padding dominate); tests monkeypatch it to exercise the device path
+# on small instances.
+DEVICE_MIN_NODES = 4096
+
+# Minimum schedule-window length for the fused device pricers (mirrors
+# list_sched._COMM_FRONT_MIN_WINDOW's role for the numpy fronts).
+DEVICE_MIN_WINDOW = 16
+
+# Minimum touched-superstep count for the fused node-move fold.
+DEVICE_MIN_STEPS = 8
+
+_R_BLK_MIN = 2048
+_INT32_BUDGET = 2 ** 30  # headroom below int32 max for any partial sum
+
+
+def _try_jax():
+    try:
+        import jax
+        import jax.numpy as jnp
+        return jax, jnp
+    except ImportError:  # pragma: no cover - exercised on jax-less CI
+        return None, None
+
+
+def _integer_valued(a: np.ndarray) -> bool:
+    a = np.asarray(a, dtype=np.float64)
+    return bool(np.all(np.isfinite(a)) and np.all(a == np.rint(a)))
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 1).bit_length()
+
+
+# ==========================================================================
+# Partition side
+# ==========================================================================
+
+def attach(state, cap: float, *, min_nodes: int | None = None,
+           interpret: bool | None = None):
+    """Build a ``DevicePartitionPass`` mirroring ``state``, or None.
+
+    Returns None -- caller falls back to the per-front path -- when jax is
+    unavailable, the instance is too small to pay for device dispatch, mu
+    is not integer-valued (the all-integer device program would not be
+    bit-identical), or an int32 partial sum could overflow.  On success the
+    engine's ``device`` hook is set so every ``apply``/``undo`` keeps the
+    device mirror in lockstep.
+    """
+    jax, _ = _try_jax()
+    if jax is None:
+        return None
+    if state.backend != "numpy" or state.device is not None:
+        return None
+    hg = state.hg
+    floor = DEVICE_MIN_NODES if min_nodes is None else min_nodes
+    if hg.n < floor:
+        return None
+    if not _integer_valued(state.mu) or np.any(state.mu < 0):
+        return None
+    if np.any(state.masks == 0):
+        # host derives a -1 primary for unassigned nodes, the device table
+        # cannot; refinement never unassigns, so the check holds for a pass
+        return None
+    mu_i = np.rint(state.mu).astype(np.int64)
+    # worst-case |delta| for one candidate: sum of incident mu * (P - 1)
+    deg = np.diff(state.xinc)
+    if len(state.inc_edges):
+        wsum = np.bincount(
+            np.repeat(np.arange(hg.n), deg), weights=mu_i[state.inc_edges],
+            minlength=hg.n)
+    else:
+        wsum = np.zeros(hg.n)
+    if wsum.max(initial=0.0) * max(state.P - 1, 1) >= _INT32_BUDGET:
+        return None
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    dev = DevicePartitionPass(state, cap, interpret=interpret)
+    state.device = dev
+    return dev
+
+
+class DevicePartitionPass:
+    """Device mirror of a ``PartitionState`` plus the fused pass programs.
+
+    Columns of ``uncov``/``contrib`` are stored pre-permuted in popcount
+    order (column 0 = subset 0), so lambda pricing is a pure masked min
+    with no per-call gather.  A dummy edge row E (mu 0, all-zero uncov) and
+    a dummy node row n (infeasible everywhere) absorb all padding.
+    """
+
+    def __init__(self, state, cap: float, *, interpret: bool) -> None:
+        jax, jnp = _try_jax()
+        self._jax, self._jnp = jax, jnp
+        self.state = state
+        self.cap = float(cap)
+        self.interpret = bool(interpret)
+        from .ops import _use_pallas
+        self.use_pallas = _use_pallas()
+        hg = state.hg
+        self.n = hg.n
+        self.P = state.P
+        self.nsub = 1 << state.P
+        self.E = len(hg.edges)
+        self.xinc = np.asarray(state.xinc, dtype=np.int64)
+        self.inc_edges_np = np.asarray(state.inc_edges, dtype=np.int64)
+        self.deg = np.diff(self.xinc).astype(np.int64)
+        self.Dmax = int(self.deg.max(initial=0))
+        max_rows = self.P * max(self.Dmax, 1)
+        self.R_blk = max(_R_BLK_MIN, _pow2(max_rows))
+        self.B_blk = self.R_blk // self.P
+        # column permutation: subset 0 first, then popcount order
+        self.colmap = np.concatenate(
+            ([0], np.asarray(state._order, dtype=np.int64)))
+        pc_p = np.concatenate(
+            ([_NO_COVER], np.asarray(state._order_pc, dtype=np.int64)))
+        self._pc = jnp.asarray(pc_p.astype(np.int32))
+        self._contrib = jnp.asarray(
+            np.ascontiguousarray(state._contrib[:, self.colmap],
+                                 dtype=np.int32))
+        popc = np.asarray(state.popcnt, dtype=np.int32)
+        self._popcnt = jnp.asarray(popc)
+        prim = np.maximum(
+            np.array([int(m).bit_length() - 1 for m in range(self.nsub)],
+                     dtype=np.int32), 0)
+        self._prim = jnp.asarray(prim)
+        mu_i = np.zeros(self.E + 1, dtype=np.int32)
+        mu_i[:self.E] = np.rint(state.mu).astype(np.int32)
+        self._mu = jnp.asarray(mu_i)
+        self._owner = np.repeat(np.arange(self.n), self.deg)  # bnd scatter
+        self._refresh_from_host()
+        self._fits = np.zeros((self.n + 1, self.P), dtype=bool)
+        self._last_loads = None
+        self._dirty = np.zeros(self.n, dtype=bool)
+        self._apply_fn = self._make_apply()
+        self._find_fm = self._make_find("fm")
+        self._find_rep = self._make_find("rep")
+        # instrumentation (sync = blocking device->host read)
+        self.syncs = 0
+        self.commits = 0
+        self.pass_scans = 0
+
+    # ------------------------------------------------------------ buffers
+    def _refresh_from_host(self) -> None:
+        """Full host -> device upload of uncov / lambdas / masks."""
+        jnp = self._jnp
+        st = self.state
+        uncov_p = np.zeros((self.E + 1, self.nsub), dtype=np.int32)
+        uncov_p[:self.E] = st.uncov[:, self.colmap]
+        self._uncov = jnp.asarray(uncov_p)
+        # device lambda: masked-min value; differs from the engine's only
+        # on rows with no assigned pins (engine 0, masked-min 1) -- the
+        # relu(cost) terms agree, so deltas are unaffected
+        lam = np.ones(self.E + 1, dtype=np.int32)
+        lam[:self.E] = np.where(st.uncov[:, 0] == 0, 1, st.edge_lambda)
+        self._lam = jnp.asarray(lam)
+        masks = np.ones(self.n + 1, dtype=np.int32)
+        masks[:self.n] = st.masks
+        self._masks = jnp.asarray(masks)
+
+    def detach(self) -> None:
+        self.state.device = None
+
+    # -------------------------------------------------------- engine hook
+    def apply(self, v: int, old: int, new: int) -> None:
+        """Mirror one host ``apply``/``undo`` mutation (no host sync)."""
+        jnp = self._jnp
+        w = np.full(self.Dmax if self.Dmax else 1, self.E, dtype=np.int32)
+        d = int(self.deg[v])
+        if d:
+            w[:d] = self.inc_edges_np[self.xinc[v]:self.xinc[v] + d]
+        self._uncov, self._lam, self._masks = self._apply_fn(
+            self._uncov, self._lam, self._masks,
+            jnp.int32(v), jnp.int32(old), jnp.int32(new), jnp.asarray(w),
+            self._contrib, self._pc)
+
+    def _make_apply(self):
+        jax, jnp = self._jax, self._jnp
+        E = self.E
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+        def apply_(uncov, lam, masks, v, old, new, e_win, contrib, pc):
+            diff = contrib[new] - contrib[old]
+            valid = e_win < E
+            uncov = uncov.at[e_win].add(
+                jnp.where(valid[:, None], diff[None, :], 0))
+            rows = uncov[e_win]
+            lam_new = jnp.min(
+                jnp.where(rows == 0, pc[None, :], _NO_COVER),
+                axis=1).astype(jnp.int32)
+            lam = lam.at[e_win].set(jnp.where(valid, lam_new, lam[e_win]))
+            masks = masks.at[v].set(new)
+            return uncov, lam, masks
+
+        return apply_
+
+    # ------------------------------------------------------- find programs
+    def _make_find(self, mode: str):
+        jax, jnp = self._jax, self._jnp
+        P, nsub = self.P, self.nsub
+        R_blk, B_blk = self.R_blk, self.B_blk
+        n = self.n
+        BIG = np.int32(np.iinfo(np.int32).max)
+        qbits = jnp.asarray((np.int64(1) << np.arange(P)).astype(np.int32))
+        allq = jnp.arange(P, dtype=jnp.int32)
+        use_pallas, interpret = self.use_pallas, self.interpret
+        Mp = -(-nsub // 128) * 128
+        is_rep = mode == "rep"
+
+        def dlam_of(rows, lam_old):
+            if use_pallas:
+                if Mp != nsub:
+                    rows = jnp.pad(rows, ((0, 0), (0, Mp - nsub)),
+                                   constant_values=1)
+                    pc = jnp.pad(self._pc, (0, Mp - nsub),
+                                 constant_values=_NO_COVER)
+                else:
+                    pc = self._pc
+                return front_dlam(rows, pc, lam_old, interpret=interpret)
+            lam_new = jnp.min(
+                jnp.where(rows == 0, self._pc[None, :], _NO_COVER),
+                axis=1).astype(jnp.int32)
+            return jnp.maximum(lam_new - 1, 0) - jnp.maximum(lam_old - 1, 0)
+
+        def find(uncov, lam, masks, mu, contrib, fits, prim, popcnt,
+                 blk_edge, blk_pair, blk_node, blk_pos, active,
+                 nb, b0, start_pos, resume_p, maxrep):
+
+            def eval_block(b):
+                edges = blk_edge[b]
+                pairs = blk_pair[b]
+                nodes = blk_node[b]
+                poss = blk_pos[b]
+                m_old = masks[nodes]
+                qof = pairs % P
+                slot = pairs // P
+                m_row = m_old[slot]
+                rows0 = uncov[edges]
+                lam_old = lam[edges]
+                mu_row = mu[edges]
+                in_win = (poss >= start_pos) & (poss < n)
+
+                def deltas_for(cand_row):
+                    rows = (rows0 + contrib[cand_row] - contrib[m_row])
+                    terms = dlam_of(rows, lam_old) * mu_row
+                    return jax.ops.segment_sum(
+                        terms, pairs,
+                        num_segments=B_blk * P).reshape(B_blk, P)
+
+                if not is_rep:
+                    # FM: candidate masks 1 << q, primary excluded
+                    d_move = deltas_for(qbits[qof])
+                    feas = fits[nodes] & (allq[None, :]
+                                          != prim[m_old][:, None])
+                    masked = jnp.where(feas, d_move, BIG)
+                    bestq = jnp.argmin(masked, axis=1).astype(jnp.int32)
+                    bestd = jnp.take_along_axis(
+                        masked, bestq[:, None], axis=1)[:, 0]
+                    elig = (bestd <= -1) & in_win
+                    sel = jnp.argmax(elig)
+                    found = elig[sel]
+                    return (jnp.where(found, poss[sel], n),
+                            jnp.int32(0),
+                            jnp.where(found, bestq[sel], 0))
+
+                # replication: add step then drop step, host visit order
+                k = popcnt[m_old]
+                unset = ((m_old[:, None] >> allq[None, :]) & 1) == 0
+                d_add = deltas_for(m_row | qbits[qof])
+                feas_add = fits[nodes] & unset & (k < maxrep)[:, None]
+                masked = jnp.where(feas_add, d_add, BIG)
+                bestq = jnp.argmin(masked, axis=1).astype(jnp.int32)
+                bestd = jnp.take_along_axis(
+                    masked, bestq[:, None], axis=1)[:, 0]
+                resuming = resume_p >= 0
+                add_sup = resuming & (poss == start_pos)
+                has_add = (bestd <= -1) & in_win & ~add_sup
+                d_drop = deltas_for(m_row & ~qbits[qof])
+                minp = jnp.where(add_sup, resume_p, 0)
+                elig_drop = (~unset & (k > 1)[:, None] & (d_drop <= 0)
+                             & (allq[None, :] >= minp[:, None])
+                             & in_win[:, None])
+                dropp = jnp.argmax(elig_drop, axis=1).astype(jnp.int32)
+                has_drop = jnp.take_along_axis(
+                    elig_drop, dropp[:, None], axis=1)[:, 0]
+                event = has_add | has_drop
+                sel = jnp.argmax(event)
+                found = event[sel]
+                kind = jnp.where(has_add[sel], 0, 1).astype(jnp.int32)
+                q = jnp.where(has_add[sel], bestq[sel], dropp[sel])
+                return (jnp.where(found, poss[sel], n), kind,
+                        jnp.where(found, q, 0))
+
+            def cond(c):
+                b, pos, _, _ = c
+                return (b < nb) & (pos >= n)
+
+            def body(c):
+                b = c[0]
+                pos, kind, q = jax.lax.cond(
+                    active[b], eval_block,
+                    lambda _b: (jnp.int32(n), jnp.int32(0), jnp.int32(0)), b)
+                return b + 1, pos, kind, q
+
+            _, pos, kind, q = jax.lax.while_loop(
+                cond, body,
+                (b0, jnp.int32(n), jnp.int32(0), jnp.int32(0)))
+            return pos, kind, q
+
+        return jax.jit(find)
+
+    # ------------------------------------------------------- block builder
+    def _build_blocks(self, perm: np.ndarray) -> None:
+        """Pack the pass's flat (pair, edge) expansion into device blocks."""
+        jnp = self._jnp
+        P, R_blk, B_blk = self.P, self.R_blk, self.B_blk
+        n = len(perm)
+        deg = self.deg[perm]
+        d = np.maximum(deg, 1)
+        rpn = P * d
+        cum = np.cumsum(rpn)
+        bounds = [0]
+        while bounds[-1] < n:
+            i = bounds[-1]
+            base = int(cum[i - 1]) if i else 0
+            j = int(np.searchsorted(cum, base + R_blk, side="right"))
+            bounds.append(min(max(j, i + 1), i + B_blk, n))
+        NB = len(bounds) - 1
+        NBp = _pow2(NB)
+        bounds = np.asarray(bounds, dtype=np.int64)
+        total = int(cum[-1])
+        owner = np.repeat(np.arange(n, dtype=np.int64), rpn)
+        starts = cum - rpn
+        off = np.arange(total, dtype=np.int64) - starts[owner]
+        q = off // d[owner]
+        eoff = off % d[owner]
+        vo = perm[owner]
+        has = deg[owner] > 0
+        if len(self.inc_edges_np):
+            src = np.minimum(self.xinc[vo] + eoff,
+                             len(self.inc_edges_np) - 1)
+            edges = np.where(has, self.inc_edges_np[src], self.E)
+        else:
+            edges = np.full(total, self.E, dtype=np.int64)
+        blk_of = np.searchsorted(bounds, owner, side="right") - 1
+        pair = (owner - bounds[blk_of]) * P + q
+        rows_at = np.concatenate(([0], cum))[bounds]
+        blk_edge = np.full((NBp, R_blk), self.E, dtype=np.int32)
+        # padding rows funnel into the last (slot, q) segment; their edge is
+        # the dummy E (mu 0), so they add exact zeros wherever they land
+        blk_pair = np.full((NBp, R_blk), B_blk * P - 1, dtype=np.int32)
+        blk_node = np.full((NBp, B_blk), self.n, dtype=np.int32)
+        blk_pos = np.full((NBp, B_blk), self.n, dtype=np.int32)
+        for b in range(NB):
+            r0, r1 = int(rows_at[b]), int(rows_at[b + 1])
+            blk_edge[b, :r1 - r0] = edges[r0:r1]
+            blk_pair[b, :r1 - r0] = pair[r0:r1]
+            i0, i1 = int(bounds[b]), int(bounds[b + 1])
+            blk_node[b, :i1 - i0] = perm[i0:i1]
+            blk_pos[b, :i1 - i0] = np.arange(i0, i1)
+        self._bounds = bounds
+        self._nb = NB
+        self._blk_edge = jnp.asarray(blk_edge)
+        self._blk_pair = jnp.asarray(blk_pair)
+        self._blk_node = jnp.asarray(blk_node)
+        self._blk_pos = jnp.asarray(blk_pos)
+
+    # --------------------------------------------------------- host helpers
+    def _boundary_start(self, rep: bool) -> np.ndarray:
+        """Nodes that can hold an event at pass start (visit-time exact
+        elsewhere: any other node must be dirtied first -- see module
+        docstring)."""
+        st = self.state
+        flag = np.asarray(st.edge_lambda > 1)
+        if len(self._owner):
+            cnt = np.bincount(self._owner[flag[self.inc_edges_np]],
+                              minlength=self.n)
+            bnd = cnt > 0
+        else:
+            bnd = np.zeros(self.n, dtype=bool)
+        if rep:
+            bnd = bnd | (np.asarray(st.popcnt[st.masks]) > 1)
+        return bnd
+
+    def _fits_now(self):
+        """(n+1, P) feasibility, recomputing only load-shifted columns."""
+        st = self.state
+        loads = np.asarray(st.loads, dtype=np.float64)
+        if self._last_loads is None:
+            changed = np.ones(self.P, dtype=bool)
+        else:
+            changed = loads != self._last_loads
+        for p in np.flatnonzero(changed):
+            self._fits[:self.n, p] = st.omega + loads[p] <= self.cap
+        self._last_loads = loads.copy()
+        return self._jnp.asarray(self._fits)
+
+    def _active_blocks(self, bnd_start: np.ndarray):
+        av = (bnd_start | self._dirty)[self._perm]
+        counts = np.add.reduceat(av.astype(np.int64), self._bounds[:-1])
+        active = np.zeros(len(self._blk_edge), dtype=bool)
+        active[:self._nb] = counts[:self._nb] > 0
+        return self._jnp.asarray(active)
+
+    def _mark_dirty(self, v: int) -> None:
+        hg = self.state.hg
+        self._dirty[hg.adj_nodes[hg.xadj[v]:hg.xadj[v + 1]]] = True
+        self._dirty[v] = True
+
+    def _call_find(self, fn, b0: int, start_pos: int, resume_p: int,
+                   maxrep: int, bnd_start: np.ndarray):
+        jnp = self._jnp
+        out = fn(self._uncov, self._lam, self._masks, self._mu,
+                 self._contrib, self._fits_now(), self._prim, self._popcnt,
+                 self._blk_edge, self._blk_pair, self._blk_node,
+                 self._blk_pos, self._active_blocks(bnd_start),
+                 jnp.int32(self._nb), jnp.int32(b0), jnp.int32(start_pos),
+                 jnp.int32(resume_p), jnp.int32(maxrep))
+        pos, kind, q = (int(x) for x in np.asarray(out))  # THE host sync
+        self.syncs += 1
+        return pos, kind, q
+
+    def _block_of(self, pos: int) -> int:
+        return int(np.searchsorted(self._bounds, pos, side="right")) - 1
+
+    # ------------------------------------------------------------ FM pass
+    def run_fm(self, rng: np.random.Generator, passes: int) -> None:
+        """Device-resident ``fm_refine`` sweep (decision-identical)."""
+        st = self.state
+        for _ in range(passes):
+            perm = rng.permutation(self.n)
+            if not self.fm_pass(perm):
+                break
+        return st.masks
+
+    def fm_pass(self, perm: np.ndarray) -> bool:
+        st = self.state
+        self._perm = np.asarray(perm, dtype=np.int64)
+        self._dirty[:] = False
+        bnd = self._boundary_start(rep=False)
+        self._build_blocks(self._perm)
+        pos, improved = 0, False
+        while pos < self.n:
+            fpos, _, q = self._call_find(self._find_fm, self._block_of(pos),
+                                         pos, -1, 0, bnd)
+            if fpos >= self.n:
+                self.pass_scans += 1
+                break
+            v = int(self._perm[fpos])
+            st.apply(v, 1 << q)
+            st.commit()
+            self.commits += 1
+            self._mark_dirty(v)
+            improved = True
+            pos = fpos + 1
+        else:
+            self.pass_scans += 1
+        return improved
+
+    # ----------------------------------------------------- replication pass
+    def rep_pass(self, perm: np.ndarray, max_replicas: int | None) -> bool:
+        """Device-resident add/drop node sweep of ``replicate_local_search``
+        (the edge-guided phase stays on the host engine; its mutations reach
+        the device through the engine hook)."""
+        st = self.state
+        self._perm = np.asarray(perm, dtype=np.int64)
+        self._dirty[:] = False
+        bnd = self._boundary_start(rep=True)
+        self._build_blocks(self._perm)
+        maxrep = self.P + 1 if max_replicas is None else int(max_replicas)
+        pos, resume_p, improved = 0, -1, False
+        while pos < self.n:
+            fpos, kind, q = self._call_find(
+                self._find_rep, self._block_of(pos), pos, resume_p, maxrep,
+                bnd)
+            if fpos >= self.n:
+                self.pass_scans += 1
+                break
+            v = int(self._perm[fpos])
+            m = int(st.masks[v])
+            if kind == 0:  # add replica q, then move on (host `continue`)
+                st.apply(v, m | (1 << q))
+                pos, resume_p = fpos + 1, -1
+            else:          # drop replica q, resume same node at p = q + 1
+                st.apply(v, m & ~(1 << q))
+                pos, resume_p = fpos, q + 1
+            st.commit()
+            self.commits += 1
+            self._mark_dirty(v)
+            improved = True
+        else:
+            self.pass_scans += 1
+        return improved
+
+
+# ==========================================================================
+# Schedule side
+# ==========================================================================
+
+def schedule_device_supported(sched) -> bool:
+    """Integer contract check: the fused int32 programs are bit-identical
+    to the float64 numpy fronts only for integral weights/parameters."""
+    jax, _ = _try_jax()
+    if jax is None:
+        return False
+    inst = sched.inst
+    return (_integer_valued(inst.dag.mu) and _integer_valued(inst.dag.omega)
+            and float(inst.L) == int(inst.L) and float(inst.g) == int(inst.g))
+
+
+class DeviceScheduleWindows:
+    """Persistent device mirror of the schedule's per-superstep rows.
+
+    Holds ``sent``/``recv``/``work`` (S, P), the top-2 triples and step
+    costs as padded int32 jnp arrays, refreshed lazily after each commit
+    (``mark_dirty``).  The window pricers return the same float64 deltas as
+    ``schedule_front.price_comm_moves`` / ``price_comp_moves`` /
+    ``price_node_moves`` -- integer device arithmetic plus the host's exact
+    float64 scalar terms -- so every decision matches the numpy fronts.
+    """
+
+    def __init__(self, sched) -> None:
+        jax, jnp = _try_jax()
+        self._jax, self._jnp = jax, jnp
+        self.sched = sched
+        self.P = sched.inst.P
+        self.L = int(sched.inst.L)
+        self.g = int(sched.inst.g)
+        self._dirty = True
+        self._win_fns: dict = {}
+        self.syncs = 0
+        self.refreshes = 0
+
+    def mark_dirty(self) -> None:
+        self._dirty = True
+
+    def _refresh(self) -> None:
+        jnp = self._jnp
+        s = self.sched
+        self.S = s.S
+        self.Sp = _pow2(self.S)
+        P = self.P
+
+        def rows(ll):
+            a = np.zeros((self.Sp, P), dtype=np.int32)
+            a[:self.S] = np.asarray(ll[:self.S])
+            return jnp.asarray(a)
+
+        def tops(tt):
+            a = np.zeros((self.Sp, 3), dtype=np.int32)
+            a[:self.S] = np.asarray(tt[:self.S])
+            return jnp.asarray(a)
+
+        self._sent, self._recv, self._work = (
+            rows(s.sent), rows(s.recv), rows(s.work))
+        self._stop, self._rtop, self._wtop = (
+            tops(s._stop), tops(s._rtop), tops(s._wtop))
+        sc = np.zeros(self.Sp, dtype=np.int32)
+        sc[:self.S] = np.asarray(s._scost[:self.S])
+        self._scost = jnp.asarray(sc)
+        self._dirty = False
+        self.refreshes += 1
+
+    def _win_fn(self, kind: str, Wp: int):
+        key = (kind, Wp)
+        fn = self._win_fns.get(key)
+        if fn is not None:
+            return fn
+        jax, jnp = self._jax, self._jnp
+        L, g = self.L, self.g
+
+        def step_cost(w1, h):
+            return jnp.where(h >= 1, w1 + L + g * h, w1)
+
+        if kind == "comm":
+            def win(sent, recv, stop, rtop, wtop, scost, lo, src, dst, mu):
+                idx = jnp.clip(lo + jnp.arange(Wp), 0, sent.shape[0] - 1)
+                s_alt = jnp.where(stop[idx, 1] == src, stop[idx, 2],
+                                  stop[idx, 0])
+                s_new = sent[idx, src] + mu
+                r_alt = jnp.where(rtop[idx, 1] == dst, rtop[idx, 2],
+                                  rtop[idx, 0])
+                r_new = recv[idx, dst] + mu
+                h = jnp.maximum(jnp.maximum(s_alt, s_new),
+                                jnp.maximum(r_alt, r_new))
+                return step_cost(wtop[idx, 0], h) - scost[idx]
+        else:
+            def win(sent, recv, stop, rtop, wtop, scost, lo, src, dst, mu):
+                # comp re-timing: src slot carries p, mu carries omega
+                idx = jnp.clip(lo + jnp.arange(Wp), 0, sent.shape[0] - 1)
+                w_alt = jnp.where(wtop[idx, 1] == src, wtop[idx, 2],
+                                  wtop[idx, 0])
+                w_new = sent[idx, src] + mu  # sent slot carries work rows
+                w1 = jnp.maximum(w_alt, w_new)
+                h = jnp.maximum(stop[idx, 0], rtop[idx, 0])
+                return step_cost(w1, h) - scost[idx]
+
+        fn = jax.jit(win)
+        self._win_fns[key] = fn
+        return fn
+
+    def price_comm_moves(self, v: int, dst: int, ts: np.ndarray) -> np.ndarray:
+        """Fused-window twin of ``schedule_front.price_comm_moves``."""
+        if self._dirty:
+            self._refresh()
+        jnp = self._jnp
+        sched = self.sched
+        src, s = sched.comms[(v, dst)]
+        mu = sched.inst.dag.mu[v]
+        d0 = sched._comm_step_delta(s, src, dst, -mu)
+        ts = np.asarray(ts, dtype=np.int64)
+        lo, W = int(ts[0]), len(ts)
+        fn = self._win_fn("comm", _pow2(W))
+        out = fn(self._sent, self._recv, self._stop, self._rtop, self._wtop,
+                 self._scost, jnp.int32(lo), jnp.int32(src), jnp.int32(dst),
+                 jnp.int32(int(mu)))
+        self.syncs += 1
+        deltas = d0 + np.asarray(out[:W], dtype=np.float64)
+        deltas[ts == s] = 0.0
+        return deltas
+
+    def price_comp_moves(self, v: int, p: int, ts: np.ndarray) -> np.ndarray:
+        """Fused-window twin of ``schedule_front.price_comp_moves``."""
+        if self._dirty:
+            self._refresh()
+        jnp = self._jnp
+        sched = self.sched
+        s = sched.assign[v][p]
+        om = sched.inst.dag.omega[v]
+        w1_minus = sched._kind_max_if("work", s, p, -om)
+        d_s = sched._step_cost(w1_minus, sched.h_of(s)) - sched._scost[s]
+        ts = np.asarray(ts, dtype=np.int64)
+        lo, W = int(ts[0]), len(ts)
+        fn = self._win_fn("comp", _pow2(W))
+        out = fn(self._work, self._recv, self._stop, self._rtop, self._wtop,
+                 self._scost, jnp.int32(lo), jnp.int32(p), jnp.int32(0),
+                 jnp.int32(int(om)))
+        self.syncs += 1
+        deltas = d_s + np.asarray(out[:W], dtype=np.float64)
+        deltas[ts == s] = 0.0
+        return deltas
+
+    def _node_fn(self, Tp: int):
+        key = ("node", Tp)
+        fn = self._win_fns.get(key)
+        if fn is not None:
+            return fn
+        jax, jnp = self._jax, self._jnp
+        L, g = self.L, self.g
+
+        def fold(work, sent, recv, scost, ts, dw, ds, dr):
+            # ts: (Tp,) touched steps; d*: (Tp, P, P) candidate x processor
+            w1 = (work[ts][:, None, :] + dw).max(axis=2)
+            s1 = (sent[ts][:, None, :] + ds).max(axis=2)
+            r1 = (recv[ts][:, None, :] + dr).max(axis=2)
+            h = jnp.maximum(s1, r1)
+            step = jnp.where(h >= 1, w1 + L + g * h, w1)
+            return (step - scost[ts][:, None]).sum(axis=0)
+
+        fn = jax.jit(fold)
+        self._win_fns[key] = fn
+        return fn
+
+    def price_node_moves(self, v: int) -> np.ndarray:
+        """Fused twin of ``schedule_front.price_node_moves``: the per-
+        superstep (P x P) delta matrices fold on device in one program.
+        Falls back to the numpy front when few supersteps are touched."""
+        from ..core.frontier.schedule_front import price_node_moves
+        sched = self.sched
+        P = self.P
+        (p, _), = sched.assign[v].items()
+        cells = _node_move_cells(sched, v)
+        if len(cells) < DEVICE_MIN_STEPS:
+            return price_node_moves(sched, v)
+        if self._dirty:
+            self._refresh()
+        jnp = self._jnp
+        steps = sorted(cells)
+        T = len(steps)
+        Tp = _pow2(T)
+        ts = np.zeros(Tp, dtype=np.int64)
+        ts[:T] = steps
+        dw = np.zeros((Tp, P, P), dtype=np.int32)
+        ds = np.zeros((Tp, P, P), dtype=np.int32)
+        dr = np.zeros((Tp, P, P), dtype=np.int32)
+        for i, t in enumerate(steps):
+            w, se, r = cells[t]
+            dw[i], ds[i], dr[i] = w, se, r
+        out = self._node_fn(Tp)(self._work, self._sent, self._recv,
+                                self._scost, jnp.asarray(ts),
+                                jnp.asarray(dw), jnp.asarray(ds),
+                                jnp.asarray(dr))
+        self.syncs += 1
+        deltas = np.asarray(out, dtype=np.float64)
+        deltas[p] = 0.0
+        return deltas
+
+
+def _node_move_cells(sched, v: int) -> dict:
+    """Per-superstep (work, sent, recv) (P, P) int delta matrices of the
+    compound node move -- the same cells ``price_node_moves`` accumulates,
+    in the same fill order (int32; caller guarantees integral weights)."""
+    P = sched.inst.P
+    (p, s), = sched.assign[v].items()
+    dag = sched.inst.dag
+    mu, om = int(dag.mu[v]), int(dag.omega[v])
+    allq = np.arange(P)
+    cells: dict[int, list] = {}
+
+    def at(t):
+        got = cells.get(t)
+        if got is None:
+            got = [np.zeros((P, P), dtype=np.int32) for _ in range(3)]
+            cells[t] = got
+        return got
+
+    for dst in sorted(sched.src_index.get((v, p), ())):
+        _, t = sched.comms[(v, dst)]
+        _, se, r = at(t)
+        se[:, p] -= mu
+        r[dst, dst] -= mu
+        keep = allq != dst
+        se[allq[keep], allq[keep]] += mu
+    for q in range(P):
+        c0 = sched.comms.get((v, q))
+        if c0 is not None and c0[0] != p:
+            src0, t0 = c0
+            at(t0)[1][q, src0] -= mu
+            at(t0)[2][q, q] -= mu
+    w = at(s)[0]
+    w[:, p] -= om
+    w[allq, allq] += om
+    uses_p = sched.uses_on(v, p)
+    if uses_p:
+        tf = min(uses_p) - 1
+        at(tf)[1][allq, allq] += mu
+        at(tf)[2][:, p] += mu
+    return cells

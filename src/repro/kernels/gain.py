@@ -41,7 +41,15 @@ def _jnp_lambda():
     return lam
 
 
-@functools.lru_cache(maxsize=None)
+# pow2 padding collapses front shapes onto a logarithmic family, but a long
+# multilevel run still visits many (Rp, Mp, block_r) triples across levels
+# and P values; an unbounded cache would pin every jitted executable for the
+# life of the process.  64 entries comfortably covers one run's working set
+# (~log2(rows) x few P values) while letting stale shape families fall out.
+_PALLAS_CACHE_SIZE = 64
+
+
+@functools.lru_cache(maxsize=_PALLAS_CACHE_SIZE)
 def _pallas_call(Rp: int, Mp: int, block_r: int, interpret: bool):
     """Jitted pallas_call for one padded shape (cached per shape family)."""
     import jax
@@ -64,6 +72,98 @@ def _pallas_call(Rp: int, Mp: int, block_r: int, interpret: bool):
         out_shape=jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
         interpret=interpret,
     ))
+
+
+@functools.lru_cache(maxsize=_PALLAS_CACHE_SIZE)
+def _pallas_dlam_call(Rp: int, Mp: int, block_r: int, interpret: bool):
+    """Fused front kernel: candidate uncov rows + old lambdas -> cost dlam.
+
+    The device-resident pass (``kernels.front_pass``) feeds it the flat
+    (pair, edge) expansion of a whole candidate front: each row is one
+    (candidate, edge) uncov row in popcount-column order, paired with the
+    edge's current lambda.  The kernel fuses the masked-min cover with the
+    ``relu(lam_new - 1) - relu(lam_old - 1)`` cost difference on the VPU,
+    so the XLA caller only segment-sums integer dlam terms per candidate.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(rows_ref, pc_ref, lam_old_ref, out_ref):
+        lam = jnp.min(jnp.where(rows_ref[:] == 0, pc_ref[:], _NO_COVER),
+                      axis=1, keepdims=True).astype(jnp.int32)
+        out_ref[:] = (jnp.maximum(lam - 1, 0)
+                      - jnp.maximum(lam_old_ref[:] - 1, 0))
+
+    return jax.jit(pl.pallas_call(
+        kernel,
+        grid=(Rp // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, Mp), lambda i: (i, 0)),
+            pl.BlockSpec((1, Mp), lambda i: (0, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+        interpret=interpret,
+    ))
+
+
+def front_dlam(rows_perm, pc, lam_old, *, block_r: int = 512,
+               interpret: bool = False):
+    """Per-row integer cost deltas for a candidate front (Pallas path).
+
+    ``rows_perm`` is a (R, M) jnp int32 array of candidate uncov rows in
+    popcount-column order (column 0 = subset 0), ``pc`` the (M,) popcounts
+    with a ``_NO_COVER`` sentinel at column 0, ``lam_old`` the (R,) current
+    edge lambdas.  Returns the (R,) int32 ``relu(lam_new-1)-relu(lam_old-1)``
+    terms.  Shapes must be pre-padded by the caller (rows to a multiple of
+    ``block_r``, columns to a multiple of 128): the device-resident pass
+    owns the padding, so this traces inside its jitted program.
+    """
+    R, M = rows_perm.shape
+    call = _pallas_dlam_call(R, M, block_r, interpret)
+    return call(rows_perm, pc.reshape(1, M),
+                lam_old.reshape(R, 1))[:, 0]
+
+
+def kernel_cache_stats() -> dict:
+    """Hit/miss/size counters of the per-shape jitted-call caches.
+
+    Exposed for the benchmarks (``device_resident`` rows record how many
+    shape families a run actually compiled) and for the cache-bound tests.
+    """
+    out = {}
+    for name, fn in (("pallas", _pallas_call), ("dlam", _pallas_dlam_call)):
+        info = fn.cache_info()
+        out[name] = {"hits": info.hits, "misses": info.misses,
+                     "size": info.currsize, "maxsize": info.maxsize}
+    return out
+
+
+# One reused pow2 pad buffer per column width for the jnp fallback: the
+# previous implementation np.concatenate'd a fresh padded copy per front,
+# which at frontier rates (thousands of fronts per refinement pass) spends
+# more time in the allocator than in the reduction.  ``_PAD_DIRTY`` tracks
+# the high-water row that holds real data, so only rows a previous front
+# actually overwrote are re-onesed (the sentinel value) before reuse.
+_PAD_BUFS: dict[int, np.ndarray] = {}
+_PAD_DIRTY: dict[int, int] = {}
+
+
+def _padded_rows(rows_perm: np.ndarray, Rp: int) -> np.ndarray:
+    R, M = rows_perm.shape
+    buf = _PAD_BUFS.get(M)
+    if buf is None or buf.shape[0] < Rp:
+        buf = np.ones((Rp, M), dtype=np.int32)
+        _PAD_BUFS[M] = buf
+        _PAD_DIRTY[M] = 0
+    dirty = _PAD_DIRTY[M]
+    if dirty > R:
+        buf[R:dirty] = 1
+    buf[:R] = rows_perm
+    _PAD_DIRTY[M] = R
+    return buf[:Rp]
 
 
 def _pallas_lambda(rows_perm: np.ndarray, pc: np.ndarray,
@@ -109,8 +209,7 @@ def min_cover_lambdas(rows: np.ndarray, order: np.ndarray,
     else:
         Rp = 1 << max(R - 1, 1).bit_length()
         if Rp != R:
-            pad = np.ones((Rp - R, rows_perm.shape[1]), dtype=np.int32)
-            rows_perm = np.concatenate([rows_perm, pad], axis=0)
+            rows_perm = _padded_rows(rows_perm, Rp)
         lam = _jnp_lambda()(rows_perm, pc)[:R]
     lam = np.asarray(lam, dtype=np.int16)
     lam[rows[:, 0] == 0] = 0

@@ -136,6 +136,7 @@ try:  # pragma: no cover
 except ImportError:
     collect_ignore = [
         "test_elastic.py",
+        "test_front_pass.py",
         "test_kernels.py",
         "test_models_smoke.py",
         "test_perf_knobs.py",

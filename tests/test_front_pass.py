@@ -1,0 +1,339 @@
+"""Device-resident refinement (kernels/front_pass.py).
+
+The device pass's contract is *bit-identity*: running a whole FM or
+replication sweep as one jitted device program -- one host sync per
+committed move -- must reproduce the numpy frontier path's final masks,
+costs and decision trajectory exactly, never approximately.  These tests
+pin that contract on random integer-weight hypergraphs/DAGs and on the
+shipped dataset instances, assert the sync-count bound
+(``commits <= syncs <= commits + pass_scans``), exercise the Pallas
+interpret-mode find path, and check the attach guards (float weights,
+unassigned nodes, size floor) fall back to the host path cleanly.
+"""
+import contextlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.frontier import device_pass, device_windows
+from repro.core.hypergraph import Dag, Hypergraph
+from repro.core.partition import PartitionState
+from repro.core.partition.cost import capacity
+from repro.core.partition.heuristic import (fm_refine, greedy_initial,
+                                            replicate_local_search)
+from repro.core.schedule import BspInstance, bspg_schedule
+from repro.core.schedule.list_sched import (comp_rebalance_pass, hill_climb,
+                                            node_move_pass, rebalance_comms)
+from repro.datagen import spmv_dataset, tiny_dataset
+from repro.kernels import front_pass, gain, ops
+
+
+# ----------------------------------------------------------------- helpers
+
+def int_hypergraph(rng, n=None, m=None):
+    """Random hypergraph with integer weights (the device contract)."""
+    n = n or int(rng.integers(8, 40))
+    m = m or int(rng.integers(5, 60))
+    edges = [tuple(rng.choice(n, size=int(rng.integers(2, min(6, n) + 1)),
+                              replace=False)) for _ in range(m)]
+    return Hypergraph(n=n, edges=edges,
+                      omega=rng.integers(1, 5, size=n).astype(float),
+                      mu=rng.integers(1, 6, size=m).astype(float))
+
+
+def random_dag(n, seed, fanin=3, p_edge=0.5, n_src=8, weighted=False):
+    rng = np.random.default_rng(seed)
+    edges = []
+    for v in range(n_src, n):
+        for u in rng.choice(v, size=min(fanin, v), replace=False):
+            if rng.random() < p_edge:
+                edges.append((int(u), v))
+    omega = rng.uniform(0.5, 4.0, size=n) if weighted else None
+    mu = rng.uniform(0.5, 3.0, size=n) if weighted else None
+    return Dag(n=n, edge_list=edges, omega=omega, mu=mu)
+
+
+@contextlib.contextmanager
+def small_device_floors():
+    """Drop the size floors so tiny test instances take the device path."""
+    saved = (front_pass.DEVICE_MIN_NODES, front_pass.DEVICE_MIN_WINDOW,
+             front_pass.DEVICE_MIN_STEPS)
+    front_pass.DEVICE_MIN_NODES = 1
+    front_pass.DEVICE_MIN_WINDOW = 1
+    front_pass.DEVICE_MIN_STEPS = 1
+    try:
+        yield
+    finally:
+        (front_pass.DEVICE_MIN_NODES, front_pass.DEVICE_MIN_WINDOW,
+         front_pass.DEVICE_MIN_STEPS) = saved
+
+
+def sched_snap(s):
+    """Full observable schedule state: cost, comm plan, assignment rows."""
+    return (s.current_cost(), sorted(s.comms.items()),
+            [sorted(a.items()) for a in s.assign])
+
+
+def _fm_pair(hg, P, eps, seed):
+    m0 = greedy_initial(hg, P, eps, np.random.default_rng(seed + 1000))
+    ma, mb = m0.copy(), m0.copy()
+    sta = PartitionState(hg, P, masks=ma)
+    stb = PartitionState(hg, P, masks=mb)
+    fm_refine(hg, ma, P, eps, np.random.default_rng(seed), state=sta,
+              frontier="numpy")
+    fm_refine(hg, mb, P, eps, np.random.default_rng(seed), state=stb,
+              frontier="jax")
+    assert stb.device is None          # detached even on the device path
+    return m0, (ma, sta), (mb, stb)
+
+
+# ------------------------------------------------- partition bit-identity
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_property_fm_device_bit_identical(seed):
+    """Whole-pass device FM == numpy frontier FM: masks and cost exact."""
+    rng = np.random.default_rng(seed)
+    hg = int_hypergraph(rng)
+    P = int(rng.integers(2, 6))
+    with small_device_floors():
+        _, (ma, sta), (mb, stb) = _fm_pair(hg, P, 0.3, seed)
+    assert np.array_equal(ma, mb)
+    assert sta.cost == stb.cost
+
+
+@given(st.integers(0, 10_000), st.sampled_from([None, 2]))
+@settings(max_examples=8, deadline=None)
+def test_property_rep_device_bit_identical(seed, max_replicas):
+    """Device replication sweep (add/drop with resume protocol) == numpy,
+    including the host edge-guided phase reaching the device via the
+    engine apply/undo hook."""
+    rng = np.random.default_rng(seed)
+    hg = int_hypergraph(rng)
+    P = int(rng.integers(2, 6))
+    m0 = greedy_initial(hg, P, 0.3, np.random.default_rng(seed + 1000))
+    with small_device_floors():
+        ra = replicate_local_search(hg, m0.copy(), P, 0.3, seed=seed,
+                                    max_replicas=max_replicas,
+                                    frontier="numpy")
+        rb = replicate_local_search(hg, m0.copy(), P, 0.3, seed=seed,
+                                    max_replicas=max_replicas,
+                                    frontier="jax")
+    assert np.array_equal(ra.masks, rb.masks)
+    assert ra.cost == rb.cost
+
+
+def test_shipped_spmv_instance_bit_identical():
+    """The device path reproduces the numpy path on a real row-net SpMV
+    hypergraph, not just synthetic randoms."""
+    hg = spmv_dataset("rn", count=1)[0]
+    with small_device_floors():
+        _, (ma, sta), (mb, stb) = _fm_pair(hg, 4, 0.3, seed=7)
+        assert np.array_equal(ma, mb) and sta.cost == stb.cost
+        ra = replicate_local_search(hg, ma.copy(), 4, 0.3, seed=7,
+                                    frontier="numpy")
+        rb = replicate_local_search(hg, ma.copy(), 4, 0.3, seed=7,
+                                    frontier="jax")
+    assert np.array_equal(ra.masks, rb.masks) and ra.cost == rb.cost
+
+
+def test_device_mirror_tracks_engine_hook():
+    """Host-engine apply/undo keep the device uncov/lambda/mask buffers in
+    lockstep without a refresh (the PR's engine hook)."""
+    rng = np.random.default_rng(11)
+    hg = int_hypergraph(rng, n=30, m=50)
+    m0 = greedy_initial(hg, 4, 0.3, np.random.default_rng(11))
+    st_ = PartitionState(hg, 4, masks=m0.copy())
+    cap = capacity(hg, 4, 0.3) + 1e-9
+    with small_device_floors():
+        dev = device_pass(st_, cap, backend="jax")
+    assert dev is not None
+    try:
+        for v in range(0, 12):
+            st_.apply(v, int(st_.masks[v]) | (1 << (v % 4)))
+            if v % 3 == 0:
+                st_.undo()
+            else:
+                st_.commit()
+        got_uncov = np.asarray(dev._uncov)[:dev.E]
+        assert np.array_equal(got_uncov, st_.uncov[:, dev.colmap])
+        assert np.array_equal(np.asarray(dev._masks)[:hg.n], st_.masks)
+    finally:
+        dev.detach()
+    assert st_.device is None
+
+
+def test_sync_accounting_bound():
+    """At most one host sync per committed move plus one terminal dry scan
+    per pass: commits <= syncs <= commits + pass_scans."""
+    rng = np.random.default_rng(7)
+    hg = int_hypergraph(rng, n=40, m=80)
+    m0 = greedy_initial(hg, 4, 0.3, np.random.default_rng(77))
+    cap = capacity(hg, 4, 0.3) + 1e-9
+    with small_device_floors():
+        st_ = PartitionState(hg, 4, masks=m0.copy())
+        dev = device_pass(st_, cap, backend="jax")
+        assert dev is not None
+        try:
+            dev.run_fm(np.random.default_rng(7), 6)
+        finally:
+            dev.detach()
+        assert dev.syncs > 0 and dev.commits > 0
+        assert dev.commits <= dev.syncs <= dev.commits + dev.pass_scans
+        # replication sweeps obey the same bound
+        st2 = PartitionState(hg, 4, masks=m0.copy())
+        dev2 = device_pass(st2, cap, backend="jax")
+        try:
+            for p in range(4):
+                if not dev2.rep_pass(np.random.default_rng(p).permutation(
+                        hg.n), None):
+                    break
+        finally:
+            dev2.detach()
+        assert dev2.commits <= dev2.syncs <= dev2.commits + dev2.pass_scans
+
+
+def test_pallas_interpret_find_identity():
+    """The find program's Pallas pricing path (interpret mode on CPU) is
+    decision-identical to the jnp path and the numpy frontier."""
+    ops.force("pallas")
+    try:
+        with small_device_floors():
+            for seed in (0, 3):
+                rng = np.random.default_rng(seed)
+                hg = int_hypergraph(rng)
+                _, (ma, sta), (mb, stb) = _fm_pair(hg, 4, 0.3, seed)
+                assert np.array_equal(ma, mb) and sta.cost == stb.cost
+    finally:
+        ops.force(None)
+    stats = gain.kernel_cache_stats()
+    assert stats["dlam"]["size"] >= 1      # the fused kernel actually ran
+
+
+def test_attach_guards():
+    """Attach declines float weights, unassigned nodes, sub-floor sizes and
+    non-jax backends -- the host path must keep working untouched."""
+    rng = np.random.default_rng(3)
+    hg = int_hypergraph(rng, n=30, m=40)
+    m0 = greedy_initial(hg, 4, 0.3, rng)
+    cap = capacity(hg, 4, 0.3) + 1e-9
+
+    st_ = PartitionState(hg, 4, masks=m0.copy())
+    assert device_pass(st_, cap, backend="numpy") is None
+    assert front_pass.attach(st_, cap) is None        # below default floor
+
+    hg_f = Hypergraph(n=hg.n, edges=hg.edges, omega=hg.omega,
+                      mu=hg.mu + 0.5)                  # non-integer mu
+    st_f = PartitionState(hg_f, 4, masks=m0.copy())
+    with small_device_floors():
+        assert device_pass(st_f, cap, backend="jax") is None
+
+    m_un = m0.copy()
+    m_un[0] = 0                                        # unassigned node
+    st_u = PartitionState(hg, 4, masks=m_un)
+    with small_device_floors():
+        assert device_pass(st_u, cap, backend="jax") is None
+
+
+# ------------------------------------------------------- schedule windows
+
+def test_schedule_passes_bit_identical():
+    """rebalance/comp/node passes and full hill_climb produce the same
+    schedule through the device window pricers as through numpy."""
+    with small_device_floors():
+        for seed in range(4):
+            n = int(np.random.default_rng(seed).integers(40, 110))
+            P = int(np.random.default_rng(seed + 1).integers(2, 6))
+            inst = BspInstance(dag=random_dag(n, seed), P=P, g=2.0, L=4.0)
+            sa = bspg_schedule(inst, seed=seed)
+            sb = bspg_schedule(inst, seed=seed)
+            assert device_windows(sb, "jax") is not None
+            hill_climb(sa, seed=seed)
+            hill_climb(sb, seed=seed, backend="jax")
+            assert sched_snap(sa) == sched_snap(sb)
+
+        inst = BspInstance(dag=random_dag(80, 5), P=4, g=2.0, L=4.0)
+        sa = bspg_schedule(inst, seed=5)
+        sb = bspg_schedule(inst, seed=5)
+        rebalance_comms(sa)
+        rebalance_comms(sb, backend="jax")
+        assert sched_snap(sa) == sched_snap(sb)
+        node_move_pass(sa)
+        node_move_pass(sb, backend="jax")
+        assert sched_snap(sa) == sched_snap(sb)
+        comp_rebalance_pass(sa)
+        comp_rebalance_pass(sb, backend="jax")
+        assert sched_snap(sa) == sched_snap(sb)
+
+
+def test_shipped_tiny_dag_bit_identical():
+    """Device-window hill_climb reproduces numpy on a shipped tiny DAG."""
+    dag = tiny_dataset()[0]
+    inst = BspInstance(dag=dag, P=4, g=2.0, L=4.0)
+    with small_device_floors():
+        sa = bspg_schedule(inst, seed=0)
+        sb = bspg_schedule(inst, seed=0)
+        hill_climb(sa, seed=0)
+        hill_climb(sb, seed=0, backend="jax")
+    assert sched_snap(sa) == sched_snap(sb)
+
+
+def test_schedule_float_weights_fall_back():
+    """Float-weight DAGs never attach (the sequential accept rule is not an
+    argmin for floats); the jax backend must silently use numpy."""
+    dag = random_dag(60, 3, weighted=True)
+    inst = BspInstance(dag=dag, P=4, g=2.0, L=4.0)
+    sa = bspg_schedule(inst, seed=0)
+    assert device_windows(sa, "jax") is None
+    sb = bspg_schedule(inst, seed=0)
+    with small_device_floors():
+        hill_climb(sa, seed=0)
+        hill_climb(sb, seed=0, backend="jax")
+    assert sched_snap(sa) == sched_snap(sb)
+
+
+# ------------------------------------------------------- kernel satellites
+
+def test_front_dlam_matches_oracle():
+    """The fused Pallas delta kernel == the straight-line numpy pricing."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(9)
+    R, M = 512, 128
+    rows = (rng.integers(0, 4, size=(R, M)) > 0).astype(np.int32)
+    pc = np.full(M, gain._NO_COVER, dtype=np.int32)
+    pc[1:16] = rng.integers(1, 6, size=15)
+    lam_old = rng.integers(0, 5, size=R).astype(np.int32)
+    got = np.asarray(front_dlam_interp(jnp.asarray(rows), jnp.asarray(pc),
+                                       jnp.asarray(lam_old)))
+    lam_new = np.where(rows == 0, pc[None, :], gain._NO_COVER).min(axis=1)
+    want = np.maximum(lam_new - 1, 0) - np.maximum(lam_old - 1, 0)
+    assert np.array_equal(got, want)
+
+
+def front_dlam_interp(rows, pc, lam_old):
+    return gain.front_dlam(rows, pc, lam_old, interpret=True)
+
+
+def test_padded_rows_reuses_and_reonese():
+    """The jnp fallback's pad buffer is reused across fronts and stale rows
+    from a larger previous front are re-onesed (the sentinel)."""
+    M = 16
+    a = np.full((3, M), 5, dtype=np.int32)
+    out_a = gain._padded_rows(a, 8)
+    assert out_a.shape == (8, M)
+    assert np.all(out_a[:3] == 5) and np.all(out_a[3:] == 1)
+    b = np.full((1, M), 7, dtype=np.int32)
+    out_b = gain._padded_rows(b, 8)
+    assert out_b is not None and out_b.base is out_a.base  # same buffer
+    assert np.all(out_b[0] == 7)
+    assert np.all(out_b[1:] == 1)                          # stale re-onesed
+
+
+def test_kernel_cache_stats_bounded():
+    """Per-shape jitted-call caches are bounded and introspectable."""
+    stats = gain.kernel_cache_stats()
+    assert set(stats) == {"pallas", "dlam"}
+    for rec in stats.values():
+        assert rec["maxsize"] == gain._PALLAS_CACHE_SIZE == 64
+        assert 0 <= rec["size"] <= rec["maxsize"]
