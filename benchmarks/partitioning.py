@@ -373,6 +373,11 @@ def _device_resident_rows(sizes, P, eps, seed, interpret_row):
         dev = device_pass(st, capacity(hg, P, eps) + 1e-9, backend="jax")
         try:
             dev.run_fm(np.random.default_rng(seed), 6)
+            # counter snapshot BEFORE the pricing microbench below -- its
+            # extra find dispatches are timing probes, not sweep syncs
+            counters = {"syncs": dev.syncs, "commits": dev.commits,
+                        "pass_scans": dev.pass_scans,
+                        "apply_dispatches": dev.apply_dispatches}
             # pricing microbench (the acceptance row): every candidate row
             # of a full pass, priced by one fused device scan (what each
             # find dispatches) vs the PR 3 per-front path (host row gather
@@ -404,8 +409,7 @@ def _device_resident_rows(sizes, P, eps, seed, interpret_row):
             "seconds_device": t_dev,
             "speedup_vs_numpy": t_np / t_dev,
             "speedup_vs_perfront": t_pf / t_dev,
-            "syncs": dev.syncs, "commits": dev.commits,
-            "pass_scans": dev.pass_scans,
+            **counters,
             "front_rows": int(n_rows),
             "price_seconds_fused": t_fused,
             "price_seconds_perfront": t_perfront,
@@ -423,6 +427,84 @@ def _device_resident_rows(sizes, P, eps, seed, interpret_row):
     return rows
 
 
+def bench_parallel(P=8, eps=0.05, seed=0, sizes=None, workers=(1, 2, 4, 8)):
+    """Worker-count sweep of the process-parallel V-cycle (PR 7 tentpole).
+
+    End-to-end ``partition_with_replication(..., multilevel=True,
+    workers=W)`` on the same streaming row-net instances as
+    ``bench_multilevel``, W swept over ``workers``.  Wall-clock speedup is
+    reported against the W=1 run *on this box* together with
+    ``cpu_count`` -- on a single-core container every W>1 row is pure
+    overhead (fork + shared-memory setup + reconciliation replay) and the
+    honest speedup is < 1; the sweep still proves the sharded path end to
+    end, and ``cost_vs_w1_pct``/``cost_not_worse`` disclose how the
+    reconciled cost compares to serial at every size.  Rows land in
+    ``BENCH_partition.json`` as ``parallel_scale`` via ``run.py``.
+    """
+    from repro.core.partition import parallel as par
+    if not par.shm_available():
+        return {"scale": [], "available": False}
+    sizes = sizes or ((16384, 65536) if FULL else (16384,))
+    rows = []
+    for n in sizes:
+        hg = large_row_net(n, seed=seed + n)
+        w1 = None
+        for W in workers:
+            t0 = time.perf_counter()
+            base, rep = partition_with_replication(
+                hg, P, eps, seed=seed, multilevel=True, workers=W)
+            t = time.perf_counter() - t0
+            assert is_valid(hg, rep.masks, P, eps)
+            row = {
+                "n": hg.n, "edges": len(hg.edges), "pins": int(hg.num_pins),
+                "P": P, "eps": eps, "workers": W,
+                "cpu_count": os.cpu_count(),
+                "seconds": t,
+                "base_cost": float(base.cost), "rep_cost": float(rep.cost),
+            }
+            if W == 1:
+                w1 = (t, float(rep.cost))
+            else:
+                row["speedup_vs_w1"] = w1[0] / t
+                row["cost_vs_w1_pct"] = (100.0 * (rep.cost - w1[1]) / w1[1]
+                                         if w1[1] > 0 else 0.0)
+                row["cost_not_worse"] = bool(rep.cost <= w1[1] + 1e-9)
+            rows.append(row)
+    return {"scale": rows, "available": True}
+
+
+def parallel_smoke(P=4, eps=0.1, seed=0):
+    """CI-sized proof of the parallel layer (``run.py --parallel-smoke``):
+    sharded matching must be bit-identical to serial, and the W=2
+    end-to-end V-cycle must produce a valid, rep-not-worse partition."""
+    from repro.core.partition import parallel as par
+    from repro.core.partition.multilevel import heavy_pin_matching
+    out = {"available": par.shm_available(), "cpu_count": os.cpu_count()}
+    if not out["available"]:
+        return out
+    hg = large_row_net(2048, seed=seed)
+    cm_s, nc_s = heavy_pin_matching(hg, 50.0, np.random.default_rng(seed))
+    with par.ParallelContext(2, min_nodes=64) as ctx:
+        cm_p, nc_p = heavy_pin_matching(hg, 50.0,
+                                        np.random.default_rng(seed), ctx=ctx)
+        assert not ctx.failed, "pool failed; smoke must run the real path"
+    assert nc_p == nc_s and np.array_equal(cm_p, cm_s)
+    saved = par.PARALLEL_MIN_NODES
+    par.PARALLEL_MIN_NODES = 256     # engage workers at smoke size
+    try:
+        t0 = time.perf_counter()
+        base, rep = partition_with_replication(hg, P, eps, seed=seed,
+                                               multilevel=True, workers=2)
+        t = time.perf_counter() - t0
+    finally:
+        par.PARALLEL_MIN_NODES = saved
+    assert is_valid(hg, rep.masks, P, eps)
+    assert rep.cost <= base.cost + 1e-9
+    out.update(n=hg.n, workers=2, seconds=t, cmap_bit_identical=True,
+               base_cost=float(base.cost), rep_cost=float(rep.cost))
+    return out
+
+
 def device_smoke(P=4, eps=0.1, seed=0):
     """Small-n CI smoke (``run.py --device-smoke``): the device-resident
     pass must reproduce the numpy path bit-exactly on every push."""
@@ -435,8 +517,14 @@ def device_smoke(P=4, eps=0.1, seed=0):
     finally:
         front_pass.DEVICE_MIN_NODES = saved
     for row in out["scale"]:    # cost equality is asserted inside; re-check
+        # fused dispatch (PR 7): every committed move's apply rides in the
+        # next find program, so a pure FM sweep is one sync per find --
+        # one per commit plus at most one pass-ending scan per pass (a
+        # pass whose last find commits at the final position ends without
+        # another find) -- and dispatches zero standalone apply programs
         assert row["commits"] <= row["syncs"] <= (row["commits"]
-                                                 + row["pass_scans"])
+                                                  + row["pass_scans"]), row
+        assert row["apply_dispatches"] == 0, row
     return out
 
 
@@ -465,6 +553,7 @@ def run_all():
     results["frontier"] = bench_frontier()
     results["multilevel"] = bench_multilevel()
     results["device"] = bench_device_resident()
+    results["parallel"] = bench_parallel()
     results["seconds"] = time.time() - t0
     return results
 
@@ -474,6 +563,8 @@ if __name__ == "__main__":
     import sys
     if "--multilevel-smoke" in sys.argv:
         print(json.dumps(multilevel_smoke(), indent=1))
+    elif "--parallel-smoke" in sys.argv:
+        print(json.dumps(parallel_smoke(), indent=1))
     elif "--device-smoke" in sys.argv:
         print(json.dumps(device_smoke(), indent=1))
     else:

@@ -54,6 +54,7 @@ def main() -> None:
         "frontier_replication": part["frontier"]["replication"],
         "multilevel_scale": part["multilevel"]["scale"],
         "device_resident": part["device"],
+        "parallel_scale": part["parallel"]["scale"],
         "datasets": {
             ds: {"instances_per_sec": row["instances_per_sec"],
                  "best_cost": min((r for _, r in row["pairs"]), default=0.0)}
@@ -85,6 +86,14 @@ def main() -> None:
               f"speedup_vs_numpy={row['speedup_vs_numpy']:.2f}x;"
               f"speedup_vs_perfront={row['speedup_vs_perfront']:.2f}x;"
               f"syncs={row['syncs']};commits={row['commits']}" + pi)
+    for row in part["parallel"].get("scale", []):
+        rel = (f"speedup_vs_w1={row['speedup_vs_w1']:.2f}x;"
+               f"cost_vs_w1={row['cost_vs_w1_pct']:+.2f}%;"
+               f"not_worse={row['cost_not_worse']};"
+               if "speedup_vs_w1" in row else "")
+        _emit(f"partition_parallel_n{row['n']}_w{row['workers']}",
+              row["seconds"],
+              rel + f"cpus={row['cpu_count']};rep_cost={row['rep_cost']:.0f}")
     for row in part["multilevel"]["scale"]:
         flat = (f"flat={row['flat_seconds']:.1f}s;"
                 f"speedup={row['speedup']:.1f}x;"
@@ -184,8 +193,18 @@ def device_smoke() -> None:
     print(json.dumps(out, indent=1))
 
 
+def parallel_smoke() -> None:
+    """``run.py --parallel-smoke``: CI-sized proof of the process-parallel
+    V-cycle -- sharded matching bit-identity and a valid W=2 end-to-end
+    run (skips cleanly where POSIX shared memory is unavailable)."""
+    from benchmarks import partitioning
+    print(json.dumps({"partition": partitioning.parallel_smoke()}, indent=1))
+
+
 if __name__ == "__main__":
     if "--device-smoke" in sys.argv:
         device_smoke()
+    elif "--parallel-smoke" in sys.argv:
+        parallel_smoke()
     else:
         main()

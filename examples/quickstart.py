@@ -52,7 +52,8 @@ from repro.optim import adamw
 from repro.runtime.trainer import Trainer, TrainerConfig
 
 
-def multilevel_demo(n: int, P: int = 8, eps: float = 0.05) -> None:
+def multilevel_demo(n: int, P: int = 8, eps: float = 0.05,
+                    workers: int | None = None) -> None:
     """Partition a production-scale spmv row-net with the V-cycle."""
     from repro.core.partition import (is_valid, partition_heuristic,
                                       partition_with_replication_multilevel)
@@ -60,11 +61,13 @@ def multilevel_demo(n: int, P: int = 8, eps: float = 0.05) -> None:
 
     hg = large_row_net(n, seed=0)
     print(f"multilevel: {hg.name} n={hg.n} edges={len(hg.edges)} "
-          f"pins={hg.num_pins} P={P} eps={eps}")
+          f"pins={hg.num_pins} P={P} eps={eps}"
+          + (f" workers={workers}" if workers else ""))
     stats: list = []
     t0 = time.perf_counter()
     base, rep = partition_with_replication_multilevel(hg, P, eps, seed=0,
-                                                      stats=stats)
+                                                      stats=stats,
+                                                      workers=workers)
     dt = time.perf_counter() - t0
     for row in stats:
         print(f"  level {row['level']:2d}  n={row['n']:7d}  "
@@ -174,10 +177,13 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=None,
                     help="instance size for --multilevel[-schedule]/--device "
                          "(defaults: 8192 / 20000 / 4096)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="shared-memory worker processes for --multilevel "
+                         "(sharded coarsening + refinement; default serial)")
     args = ap.parse_args()
 
     if args.multilevel:
-        multilevel_demo(args.n or 8192)
+        multilevel_demo(args.n or 8192, workers=args.workers)
         return
     if args.multilevel_schedule:
         multilevel_schedule_demo(args.n or 20_000)

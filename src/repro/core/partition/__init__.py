@@ -7,6 +7,8 @@ from .heuristic import (HeuristicResult, fm_refine, greedy_initial,
                         replicate_local_search)
 from .multilevel import (MultilevelOptions, multilevel_partition,
                          partition_with_replication_multilevel)
+from .parallel import (ParallelContext, ShmRegistry, parallel_refine,
+                       plan_shards, shm_available)
 
 __all__ = [
     "capacity", "edge_cost", "edge_lambdas", "is_balanced", "is_valid",
@@ -14,5 +16,6 @@ __all__ = [
     "exact_partition", "HeuristicResult", "fm_refine", "greedy_initial",
     "partition_heuristic", "partition_with_replication",
     "replicate_local_search", "MultilevelOptions", "multilevel_partition",
-    "partition_with_replication_multilevel",
+    "partition_with_replication_multilevel", "ParallelContext",
+    "ShmRegistry", "parallel_refine", "plan_shards", "shm_available",
 ]

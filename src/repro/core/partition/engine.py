@@ -230,6 +230,48 @@ class PartitionState:
             self.loads = self.loads.tolist()
             self._omega_l = self.omega.tolist()
 
+    # ------------------------------------------------------------- adoption
+    @classmethod
+    def from_arrays(cls, hg: Hypergraph, P: int, masks: np.ndarray,
+                    uncov: np.ndarray, edge_lambda: np.ndarray,
+                    loads: np.ndarray | None = None) -> "PartitionState":
+        """Adopt prebuilt engine arrays without any rebuild (numpy backend).
+
+        The process-parallel layer uses this twice over: workers slice the
+        parent state's shared-memory ``uncov``/``edge_lambda`` rows for
+        their shard's edges and resume refinement on them directly, and the
+        parent re-adopts shared-memory copies of its own arrays so later
+        mutations stay zero-copy visible.  The arrays are adopted, NOT
+        copied (except ``loads``, which each side mutates privately) --
+        callers own the aliasing discipline.  ``uncov``/``edge_lambda``
+        must be consistent with ``masks`` over ``hg``'s edges; ``check()``
+        verifies exactly that.
+        """
+        st = cls.__new__(cls)
+        st.backend = "numpy"
+        st.hg = hg
+        st.P = int(P)
+        st.popcnt, st._order, st._order_pc, st._contrib = _tables(P)
+        st.xpins = hg.xpins
+        st.pins = hg.pins
+        st.xinc = hg.xinc
+        st.inc_edges = hg.inc_edges
+        st.mu = np.asarray(hg.mu, dtype=np.float64)
+        st.omega = np.asarray(hg.omega, dtype=np.float64)
+        st.masks = np.asarray(masks, dtype=np.int64)
+        st.uncov = uncov
+        st.edge_lambda = edge_lambda
+        st.cost = float(
+            (st.mu * np.maximum(st.edge_lambda - 1, 0)).sum())
+        if loads is None:
+            bits = (st.masks[:, None] >> np.arange(st.P)) & 1
+            st.loads = (bits * st.omega[:, None]).sum(axis=0)
+        else:
+            st.loads = np.asarray(loads, dtype=np.float64).copy()
+        st._undo = []
+        st.device = None
+        return st
+
     # ------------------------------------------------------------- projection
     @classmethod
     def from_projection(cls, hg: Hypergraph, P: int,

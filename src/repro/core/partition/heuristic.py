@@ -104,7 +104,8 @@ def greedy_initial(hg: Hypergraph, P: int, eps: float, rng: np.random.Generator)
 def fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
               rng: np.random.Generator, passes: int = 6,
               state: PartitionState | None = None,
-              frontier: str | None = None) -> np.ndarray:
+              frontier: str | None = None,
+              nodes: np.ndarray | None = None) -> np.ndarray:
     """Move-based refinement (single-assignment masks), engine-backed.
 
     Stage entry point, independently callable with externally supplied
@@ -116,10 +117,17 @@ def fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
     applied move (output-sensitive FM).  ``frontier="off"`` keeps the
     per-node rescan; both take identical decisions (ties to the lowest
     processor id, see the module docstring).
+
+    ``nodes`` (optional sorted id array) restricts the sweep to those
+    movers -- the process-parallel layer's shard/boundary passes.  With
+    ``nodes=None`` the RNG consumption is byte-identical to before the
+    parameter existed (one ``permutation(hg.n)`` per pass).
     """
     cap = capacity(hg, P, eps) + 1e-9
     st = state if state is not None else PartitionState(hg, P, masks=masks)
-    if frontier != "off":
+    if nodes is not None:
+        nodes = np.asarray(nodes, dtype=np.int64)
+    if frontier != "off" and nodes is None:
         # jax backend, large instance: run whole passes device-resident
         # (one host sync per committed move; decisions bit-identical --
         # see kernels.front_pass).  Falls through to the numpy front path
@@ -136,7 +144,9 @@ def fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
     if frontier == "off":
         for _ in range(passes):
             improved = False
-            for v in rng.permutation(hg.n):
+            for v in (rng.permutation(hg.n) if nodes is None
+                      else nodes[rng.permutation(len(nodes))]):
+                v = int(v)
                 p = int(st.masks[v]).bit_length() - 1
                 targets = [q for q in range(P)
                            if q != p and st.fits(v, q, cap)]
@@ -178,7 +188,8 @@ def fm_refine(hg: Hypergraph, masks: np.ndarray, P: int, eps: float,
     xadj, adj_nodes = hg.xadj, hg.adj_nodes
     for _ in range(passes):
         improved = False
-        perm = rng.permutation(hg.n)
+        perm = (rng.permutation(hg.n) if nodes is None
+                else nodes[rng.permutation(len(nodes))])
         for i, v in enumerate(perm):
             if not bnd_fresh[v]:
                 inc = inc_edges[xinc[v]:xinc[v + 1]]
@@ -249,6 +260,7 @@ def replicate_local_search(
     seed: int = 0,
     frontier: str | None = None,
     state: PartitionState | None = None,
+    nodes: np.ndarray | None = None,
 ) -> HeuristicResult:
     """Add/drop replicas while the (lambda_e - 1) cost decreases.
 
@@ -262,6 +274,13 @@ def replicate_local_search(
     ``frontier="off"`` keeps the per-node engine rescan -- identical
     decisions, ties to the lowest processor id); drops and the multi-pin
     edge-guided move stay on the engine's scalar delta / apply+undo path.
+
+    ``nodes`` (optional sorted id array) restricts every mover -- the node
+    sweep visits only those nodes and the edge-guided move may only
+    replicate onto processors whose minority pins all lie inside the set
+    (the process-parallel layer's shard/boundary discipline).  With
+    ``nodes=None`` the RNG consumption is byte-identical to before the
+    parameter existed.
     """
     if P > _MAX_P:  # beyond the engine's 2^P tables: scalar reference path
         from .reference import replicate_local_search_reference
@@ -278,7 +297,12 @@ def replicate_local_search(
     dev = None
     W = 64
     use_windows = len(st.pins) <= 128 * max(hg.n, 1)  # cf. fm_refine
-    if frontier != "off":
+    allowed = None
+    if nodes is not None:
+        nodes = np.asarray(nodes, dtype=np.int64)
+        allowed = np.zeros(hg.n, dtype=bool)
+        allowed[nodes] = True
+    if frontier != "off" and nodes is None:
         # device-resident node sweep (cf. fm_refine): the edge-guided phase
         # stays on the host engine, whose apply/undo hook keeps the device
         # mirror synced; the add/drop sweep runs on device with one host
@@ -319,6 +343,10 @@ def replicate_local_search(
         cnt = off.sum(axis=0)
         w = hg.omega[e] @ off
         ok = (cnt > 0) & (np.asarray(st.loads) + w <= cap)
+        if allowed is not None:
+            # shard discipline: only processors whose minority pins are all
+            # permitted movers are eligible (other pins stay untouched)
+            ok &= ~(off & ~allowed[e][:, None]).any(axis=0)
         if max_replicas is not None:
             at_cap = st.popcnt[masks_e] >= max_replicas
             ok &= ~(off & at_cap[:, None]).any(axis=0)
@@ -399,7 +427,8 @@ def replicate_local_search(
             for ei in rng.permutation(len(hg.edges)):
                 if try_edge_move(int(ei)):
                     improved = True
-            perm = rng.permutation(hg.n)
+            perm = (rng.permutation(hg.n) if nodes is None
+                    else nodes[rng.permutation(len(nodes))])
             if dev is not None:
                 # device node sweep: same permutation, same decisions
                 if dev.rep_pass(perm, max_replicas):
@@ -424,6 +453,7 @@ def partition_with_replication(
     seed: int = 0,
     frontier: str | None = None,
     multilevel: bool = False,
+    workers: int | None = None,
 ):
     """End-to-end entry: returns (non_repl_result, repl_result).
 
@@ -434,6 +464,11 @@ def partition_with_replication(
     V-cycle driver (``multilevel.partition_with_replication_multilevel``)
     -- required for production-scale instances (n ~ 10^4-10^5), same
     semantics as the flat search (never-worse cost, identical validity).
+    ``workers=W`` (multilevel only) runs the V-cycle's coarsening scores
+    and refinement shards on a W-process shared-memory pool
+    (``core.partition.parallel``); cost stays never-worse -- the parallel
+    reconciliation accepts improving moves only -- but the refinement
+    trajectory may diverge from serial (disclosed in the benches).
     """
     from .exact import exact_partition
 
@@ -445,7 +480,8 @@ def partition_with_replication(
     if multilevel:
         from .multilevel import partition_with_replication_multilevel
         return partition_with_replication_multilevel(
-            hg, P, eps, mode=mode, seed=seed, frontier=frontier)
+            hg, P, eps, mode=mode, seed=seed, frontier=frontier,
+            workers=workers)
     base = partition_heuristic(hg, P, eps, seed=seed, frontier=frontier)
     max_replicas = 2 if mode == "dup" else None
     # alternate replication local search with FM passes on the primary

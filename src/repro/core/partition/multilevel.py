@@ -74,25 +74,30 @@ class MultilevelOptions:
 
 # --------------------------------------------------------------- coarsening
 
-def heavy_pin_matching(hg: Hypergraph, max_weight: float,
-                       rng: np.random.Generator,
-                       max_edge_size: int = 24) -> tuple[np.ndarray, int]:
-    """Cluster map from heavy-pin matching, scored over the CSR arrays.
+def _match_pref(hg: Hypergraph, max_edge_size: int, lo: int = 0,
+                hi: int | None = None) -> np.ndarray:
+    """Best heavy-pin partner per node of ``[lo, hi)`` (-1 = none).
 
-    Connectivity score between two nodes is ``sum mu_e / (|e| - 1)`` over
-    shared hyperedges (the classic heavy-edge rating); edges larger than
-    ``max_edge_size`` are ignored for scoring (they are nearly uncut-able
-    and would blow the pair expansion up quadratically).  Every node's best
-    partner (max score, ties to the smallest id) is computed in one
-    vectorized pass; a greedy sweep in random order then pairs mutually
-    free nodes whose combined weight stays under ``max_weight``.  Unmatched
-    nodes become singleton clusters.  Returns ``(cmap, nc)``.
+    The pair expansion for a node v draws only on v's incident small
+    edges, and the (v, u) score sums accumulate in ascending-edge
+    expansion order -- so computing a node range from the range's incident
+    edge set (an ascending superset of each member's incident edges)
+    reproduces the full-graph pass byte for byte.  That is the sharding
+    contract of the process-parallel scorer: concatenating per-range
+    results over any partition of [0, n) equals the serial ``pref``.
     """
     n = hg.n
+    hi = n if hi is None else hi
     xpins, pins = hg.xpins, hg.pins
     lens = np.diff(xpins)
-    sel = np.flatnonzero((lens >= 2) & (lens <= max_edge_size))
-    pref = np.full(n, -1, dtype=np.int64)
+    if lo == 0 and hi == n:
+        sel = np.flatnonzero((lens >= 2) & (lens <= max_edge_size))
+    else:
+        xinc, inc = hg.xinc, hg.inc_edges
+        cand = np.unique(inc[xinc[lo]:xinc[hi]])
+        cl = lens[cand]
+        sel = cand[(cl >= 2) & (cl <= max_edge_size)]
+    pref = np.full(hi - lo, -1, dtype=np.int64)
     if len(sel):
         L = lens[sel]
         L2 = L * L
@@ -105,6 +110,8 @@ def heavy_pin_matching(hg: Hypergraph, max_weight: float,
         u = pins[base + offs % Lr]
         w = np.repeat(hg.mu[sel] / (L - 1), L2)
         keep = v != u
+        if lo > 0 or hi < n:
+            keep &= (v >= lo) & (v < hi)
         v, u, w = v[keep], u[keep], w[keep]
         if len(v):
             key = v * n + u
@@ -120,7 +127,38 @@ def heavy_pin_matching(hg: Hypergraph, max_weight: float,
             vd2 = vd[order2]
             lead = np.ones(len(vd2), dtype=bool)
             lead[1:] = vd2[1:] != vd2[:-1]
-            pref[vd2[lead]] = ud[order2][lead]
+            pref[vd2[lead] - lo] = ud[order2][lead]
+    return pref
+
+
+def heavy_pin_matching(hg: Hypergraph, max_weight: float,
+                       rng: np.random.Generator,
+                       max_edge_size: int = 24,
+                       ctx=None) -> tuple[np.ndarray, int]:
+    """Cluster map from heavy-pin matching, scored over the CSR arrays.
+
+    Connectivity score between two nodes is ``sum mu_e / (|e| - 1)`` over
+    shared hyperedges (the classic heavy-edge rating); edges larger than
+    ``max_edge_size`` are ignored for scoring (they are nearly uncut-able
+    and would blow the pair expansion up quadratically).  Every node's best
+    partner (max score, ties to the smallest id) is computed in one
+    vectorized pass; a greedy sweep in random order then pairs mutually
+    free nodes whose combined weight stays under ``max_weight``.  Unmatched
+    nodes become singleton clusters.  Returns ``(cmap, nc)``.
+
+    ``ctx`` (a ``parallel.ParallelContext``) shards the scoring pass --
+    the O(sum |e|^2) pair expansion, the expensive half -- over node
+    ranges across the worker pool; the O(n) greedy sweep stays serial on
+    the same ``rng``, so the resulting ``cmap`` is bit-identical to the
+    serial path for every worker count.
+    """
+    n = hg.n
+    if (ctx is not None and not ctx.failed and ctx.workers > 1
+            and n >= ctx.min_nodes):
+        from .parallel import parallel_match_pref
+        pref = parallel_match_pref(hg, ctx, max_edge_size)
+    else:
+        pref = _match_pref(hg, max_edge_size)
     omega = hg.omega
     match = np.full(n, -1, dtype=np.int64)
     for v in rng.permutation(n):
@@ -141,11 +179,13 @@ def heavy_pin_matching(hg: Hypergraph, max_weight: float,
 
 
 def build_levels(hg: Hypergraph, P: int, eps: float, opts: MultilevelOptions,
-                 rng: np.random.Generator):
+                 rng: np.random.Generator, ctx=None):
     """Coarsen until small/stagnant: ``(levels, cmaps, edge_maps)``.
 
     ``levels[0]`` is the input; ``cmaps[i]``/``edge_maps[i]`` map
-    ``levels[i]`` onto ``levels[i + 1]``.
+    ``levels[i]`` onto ``levels[i + 1]``.  ``ctx`` shards the matching
+    scorer across a worker pool (bit-identical cmaps, see
+    ``heavy_pin_matching``).
     """
     levels, cmaps, edge_maps = [hg], [], []
     # cluster weight cap: granular enough that the coarsest greedy's
@@ -155,7 +195,8 @@ def build_levels(hg: Hypergraph, P: int, eps: float, opts: MultilevelOptions,
     while levels[-1].n > opts.coarsest_n and len(levels) < opts.max_levels:
         cur = levels[-1]
         cmap, nc = heavy_pin_matching(cur, max_w, rng,
-                                      max_edge_size=opts.max_edge_size)
+                                      max_edge_size=opts.max_edge_size,
+                                      ctx=ctx)
         if nc >= opts.stagnation * cur.n:
             break
         coarse, emap = cur.contract(cmap, nc)
@@ -206,10 +247,50 @@ def _compose_maps(cmaps, edge_maps, lo: int, hi: int):
     return cmap, emap
 
 
+def _make_ctx(workers: int | None):
+    """A ``ParallelContext`` for ``workers > 1`` (None when unavailable)."""
+    if not workers or workers <= 1:
+        return None
+    from .parallel import ParallelContext, shm_available
+    if not shm_available():
+        return None
+    return ParallelContext(workers)
+
+
+def _fm_stop(fine: Hypergraph, st: PartitionState, P: int, eps: float,
+             rng: np.random.Generator, passes: int, frontier: str | None,
+             ctx, seed: int) -> None:
+    """One FM refinement stop: sharded workers + reconciliation when a
+    ``ParallelContext`` is live and the level is big enough, the serial
+    frontier-priced pass otherwise.  Mutates ``st`` in place."""
+    if ctx is not None and not ctx.failed and fine.n >= ctx.min_nodes:
+        from .parallel import parallel_refine
+        parallel_refine(fine, st, P, eps, ctx, "fm", passes, seed=seed)
+    else:
+        fm_refine(fine, st.masks, P, eps, rng, passes=passes, state=st,
+                  frontier=frontier)
+
+
+def _rep_stop(fine: Hypergraph, st: PartitionState, P: int, eps: float,
+              passes: int, max_replicas: int | None, frontier: str | None,
+              ctx, seed: int) -> HeuristicResult:
+    """One replication refinement stop (cf. ``_fm_stop``)."""
+    if ctx is not None and not ctx.failed and fine.n >= ctx.min_nodes:
+        from .parallel import parallel_refine
+        parallel_refine(fine, st, P, eps, ctx, "rep", passes, seed=seed,
+                        max_replicas=max_replicas)
+        return HeuristicResult(masks=st.masks.copy(), cost=float(st.cost))
+    return replicate_local_search(fine, st.masks, P, eps,
+                                  max_replicas=max_replicas,
+                                  max_passes=passes, seed=seed,
+                                  frontier=frontier, state=st)
+
+
 def multilevel_partition(hg: Hypergraph, P: int, eps: float,
                          opts: MultilevelOptions | None = None,
                          seed: int = 0, frontier: str | None = None,
-                         stats: list | None = None) -> HeuristicResult:
+                         stats: list | None = None,
+                         workers: int | None = None) -> HeuristicResult:
     """Non-replicating V-cycle: coarsest flat solve + per-level FM.
 
     Falls through to the flat heuristic when the instance is already at or
@@ -225,36 +306,45 @@ def multilevel_partition(hg: Hypergraph, P: int, eps: float,
         # literally identical there
         return partition_heuristic(hg, P, eps, seed=seed, frontier=frontier)
     rng = np.random.default_rng(seed)
-    levels, cmaps, edge_maps = build_levels(hg, P, eps, opts, rng)
-    if not cmaps:
-        # matching stagnated immediately (e.g. every edge above
-        # max_edge_size, or a weight cap below any pair): no coarse level
-        # exists, so the V-cycle degenerates to the flat heuristic
-        return partition_heuristic(hg, P, eps, seed=seed, frontier=frontier)
-    res = partition_heuristic(levels[-1], P, eps, restarts=opts.restarts,
-                              seed=seed, frontier=frontier)
-    st = PartitionState(levels[-1], P, masks=res.masks)
-    if stats is not None:
-        stats.append({"level": len(levels) - 1, "n": levels[-1].n,
-                      "edges": len(levels[-1].edges),
-                      "cost_projected": float(st.cost),
-                      "cost_refined": float(st.cost)})
-    prev = len(levels) - 1
-    for li in sorted(_refinement_schedule(len(levels), opts.refine_every),
-                     reverse=True):
-        cmap, emap = _compose_maps(cmaps, edge_maps, li, prev)
-        st = _project_state(levels[li], P, st, cmap, emap)
-        prev = li
-        projected = float(st.cost)
-        fm_refine(levels[li], st.masks, P, eps, rng,
-                  passes=opts.final_fm_passes if li == 0 else opts.fm_passes,
-                  state=st, frontier=frontier)
+    ctx = _make_ctx(workers)
+    try:
+        levels, cmaps, edge_maps = build_levels(hg, P, eps, opts, rng,
+                                                ctx=ctx)
+        if not cmaps:
+            # matching stagnated immediately (e.g. every edge above
+            # max_edge_size, or a weight cap below any pair): no coarse
+            # level exists, so the V-cycle degenerates to the flat heuristic
+            return partition_heuristic(hg, P, eps, seed=seed,
+                                       frontier=frontier)
+        res = partition_heuristic(levels[-1], P, eps,
+                                  restarts=opts.restarts,
+                                  seed=seed, frontier=frontier)
+        st = PartitionState(levels[-1], P, masks=res.masks)
         if stats is not None:
-            stats.append({"level": li, "n": levels[li].n,
-                          "edges": len(levels[li].edges),
-                          "cost_projected": projected,
+            stats.append({"level": len(levels) - 1, "n": levels[-1].n,
+                          "edges": len(levels[-1].edges),
+                          "cost_projected": float(st.cost),
                           "cost_refined": float(st.cost)})
-    return HeuristicResult(masks=st.masks.copy(), cost=float(st.cost))
+        prev = len(levels) - 1
+        for li in sorted(_refinement_schedule(len(levels),
+                                              opts.refine_every),
+                         reverse=True):
+            cmap, emap = _compose_maps(cmaps, edge_maps, li, prev)
+            st = _project_state(levels[li], P, st, cmap, emap)
+            prev = li
+            projected = float(st.cost)
+            _fm_stop(levels[li], st, P, eps, rng,
+                     opts.final_fm_passes if li == 0 else opts.fm_passes,
+                     frontier, ctx, seed + 101 * li)
+            if stats is not None:
+                stats.append({"level": li, "n": levels[li].n,
+                              "edges": len(levels[li].edges),
+                              "cost_projected": projected,
+                              "cost_refined": float(st.cost)})
+        return HeuristicResult(masks=st.masks.copy(), cost=float(st.cost))
+    finally:
+        if ctx is not None:
+            ctx.close()
 
 
 def partition_with_replication_multilevel(
@@ -266,6 +356,7 @@ def partition_with_replication_multilevel(
     seed: int = 0,
     frontier: str | None = None,
     stats: list | None = None,
+    workers: int | None = None,
 ):
     """Multilevel analogue of ``partition_with_replication``.
 
@@ -297,71 +388,78 @@ def partition_with_replication_multilevel(
                                           frontier=frontier)
     max_replicas = 2 if mode == "dup" else None
     rng = np.random.default_rng(seed)
-    levels, cmaps, edge_maps = build_levels(hg, P, eps, opts, rng)
-    if not cmaps:  # immediate stagnation: no coarse level (cf. above)
-        return partition_with_replication(hg, P, eps, mode=mode,
-                                          exact_node_limit=0, seed=seed,
-                                          frontier=frontier)
-    base_res = partition_heuristic(levels[-1], P, eps,
-                                   restarts=opts.restarts, seed=seed,
-                                   frontier=frontier)
-    base_st = PartitionState(levels[-1], P, masks=base_res.masks)
-    rep_res = replicate_local_search(levels[-1], base_res.masks.copy(), P,
-                                     eps, max_replicas=max_replicas,
-                                     seed=seed, frontier=frontier)
-    rep_st = PartitionState(levels[-1], P, masks=rep_res.masks)
-    prev = len(levels) - 1
-    for li in sorted(_refinement_schedule(len(levels), opts.refine_every),
-                     reverse=True):
-        fine = levels[li]
-        finest = li == 0
-        cmap, emap = _compose_maps(cmaps, edge_maps, li, prev)
-        base_st = _project_state(fine, P, base_st, cmap, emap)
-        fm_refine(fine, base_st.masks, P, eps, rng,
-                  passes=opts.final_fm_passes if finest else opts.fm_passes,
-                  state=base_st, frontier=frontier)
-        rep_st = _project_state(fine, P, rep_st, cmap, emap)
-        prev = li
-        projected = float(rep_st.cost)
-        passes = opts.final_rep_passes if finest else opts.rep_passes
-        rep = replicate_local_search(fine, rep_st.masks, P, eps,
-                                     max_replicas=max_replicas,
-                                     max_passes=passes, seed=seed,
-                                     frontier=frontier, state=rep_st)
-        if finest and rep.cost > base_st.cost - 1e-12:
-            # alternation seed at the finest level: replicate from the
-            # refined base masks -- only needed when the projected stream
-            # did not already beat the base (guarantees rep <= base)
-            alt = replicate_local_search(fine, base_st.masks.copy(), P, eps,
-                                         max_replicas=max_replicas,
-                                         max_passes=passes,
-                                         seed=seed + li + 1,
-                                         frontier=frontier)
-            if alt.cost < rep.cost - 1e-12:
-                rep = alt
-        if stats is not None:
-            stats.append({"level": li, "n": fine.n,
-                          "edges": len(fine.edges),
-                          "cost_projected": projected,
-                          "cost_refined": float(rep.cost),
-                          "base_cost": float(base_st.cost)})
-    base = HeuristicResult(masks=base_st.masks.copy(),
-                           cost=float(base_st.cost))
-    best = rep
-    # flat-driver alternation at the finest level: re-run FM on the primary
-    # copies, replicate again, keep while it improves (cf. heuristic.py)
-    for r in range(opts.alternations):
-        masks = best.masks.copy()
-        primary = np.array([1 << (int(m).bit_length() - 1) for m in masks])
-        moved = fm_refine(hg, primary.copy(), P, eps,
-                          np.random.default_rng(seed + r + 1),
-                          passes=opts.final_fm_passes, frontier=frontier)
-        cand = replicate_local_search(hg, moved, P, eps,
-                                      max_replicas=max_replicas,
-                                      max_passes=opts.final_rep_passes,
-                                      seed=seed + r + 1, frontier=frontier)
-        if cand.cost < best.cost - 1e-12:
-            best = cand
-        else:
-            break
-    return base, best
+    ctx = _make_ctx(workers)
+    try:
+        levels, cmaps, edge_maps = build_levels(hg, P, eps, opts, rng,
+                                                ctx=ctx)
+        if not cmaps:  # immediate stagnation: no coarse level (cf. above)
+            return partition_with_replication(hg, P, eps, mode=mode,
+                                              exact_node_limit=0, seed=seed,
+                                              frontier=frontier)
+        base_res = partition_heuristic(levels[-1], P, eps,
+                                       restarts=opts.restarts, seed=seed,
+                                       frontier=frontier)
+        base_st = PartitionState(levels[-1], P, masks=base_res.masks)
+        rep_res = replicate_local_search(levels[-1], base_res.masks.copy(),
+                                         P, eps, max_replicas=max_replicas,
+                                         seed=seed, frontier=frontier)
+        rep_st = PartitionState(levels[-1], P, masks=rep_res.masks)
+        prev = len(levels) - 1
+        for li in sorted(_refinement_schedule(len(levels),
+                                              opts.refine_every),
+                         reverse=True):
+            fine = levels[li]
+            finest = li == 0
+            cmap, emap = _compose_maps(cmaps, edge_maps, li, prev)
+            base_st = _project_state(fine, P, base_st, cmap, emap)
+            _fm_stop(fine, base_st, P, eps, rng,
+                     opts.final_fm_passes if finest else opts.fm_passes,
+                     frontier, ctx, seed + 101 * li)
+            rep_st = _project_state(fine, P, rep_st, cmap, emap)
+            prev = li
+            projected = float(rep_st.cost)
+            passes = opts.final_rep_passes if finest else opts.rep_passes
+            rep = _rep_stop(fine, rep_st, P, eps, passes, max_replicas,
+                            frontier, ctx, seed)
+            if finest and rep.cost > base_st.cost - 1e-12:
+                # alternation seed at the finest level: replicate from the
+                # refined base masks -- only needed when the projected
+                # stream did not already beat the base (guarantees
+                # rep <= base)
+                alt_st = PartitionState(fine, P,
+                                        masks=base_st.masks.copy())
+                alt = _rep_stop(fine, alt_st, P, eps, passes, max_replicas,
+                                frontier, ctx, seed + li + 1)
+                if alt.cost < rep.cost - 1e-12:
+                    rep = alt
+            if stats is not None:
+                stats.append({"level": li, "n": fine.n,
+                              "edges": len(fine.edges),
+                              "cost_projected": projected,
+                              "cost_refined": float(rep.cost),
+                              "base_cost": float(base_st.cost)})
+        base = HeuristicResult(masks=base_st.masks.copy(),
+                               cost=float(base_st.cost))
+        best = rep
+        # flat-driver alternation at the finest level: re-run FM on the
+        # primary copies, replicate again, keep while it improves (cf.
+        # heuristic.py)
+        for r in range(opts.alternations):
+            masks = best.masks.copy()
+            primary = np.array([1 << (int(m).bit_length() - 1)
+                                for m in masks])
+            alt_rng = np.random.default_rng(seed + r + 1)
+            fm_st = PartitionState(hg, P, masks=primary.copy())
+            _fm_stop(hg, fm_st, P, eps, alt_rng, opts.final_fm_passes,
+                     frontier, ctx, seed + r + 1)
+            rls_st = PartitionState(hg, P, masks=fm_st.masks.copy())
+            cand = _rep_stop(hg, rls_st, P, eps, opts.final_rep_passes,
+                             max_replicas, frontier, ctx, seed + r + 1)
+            if cand.cost < best.cost - 1e-12:
+                best = cand
+            else:
+                break
+        return base, best
+    finally:
+        if ctx is not None:
+            ctx.close()

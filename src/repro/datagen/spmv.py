@@ -72,7 +72,9 @@ def row_net_hypergraph(nz: list[tuple[int, int]], n_cols: int,
 def large_row_net(n: int, seed: int = 0, band: int = 3,
                   fill_per_row: float = 2.0, n_dense: int = 2,
                   dense_len: int = 256,
-                  name: str | None = None) -> Hypergraph:
+                  name: str | None = None,
+                  chunk_rows: int | None = None,
+                  alloc=None) -> Hypergraph:
     """Streaming row-net generator for multilevel-scale instances.
 
     ``synthetic_sparse_matrix`` materializes a python set of (i, j) pairs
@@ -81,11 +83,24 @@ def large_row_net(n: int, seed: int = 0, band: int = 3,
     generator keeps the same structural mix (band + random fill + a few
     dense rows/columns) but parameterized *per row* (``fill_per_row``
     non-zeros of random fill per row, dense rows/columns capped at
-    ``dense_len``), and builds everything as flat numpy coordinate arrays:
-    dedup via one ``np.unique`` over i*n + j, edges via one sort + split.
+    ``dense_len``), and builds everything as flat numpy coordinate arrays
+    emitted straight as a CSR ``Hypergraph`` (no per-edge tuples at all).
     n = 65536 builds in a couple of seconds; n and seed are the knobs the
     scale benchmarks sweep.
+
+    ``chunk_rows`` bounds the dedup working set: the i*n + j key space is
+    partitioned by row ranges, each range deduped/sorted on its own, and
+    the per-range results concatenated -- bit-identical to the one-shot
+    ``np.unique`` (row-major key order is preserved across ranges), so the
+    default (one shot) and chunked paths produce the same hypergraph.
+
+    ``alloc(shape, dtype)``, when given, allocates the output CSR arrays
+    (``xpins``/``pins``/``omega``) -- pass ``ShmRegistry.alloc`` and a
+    ~10^7-pin instance lands directly in shared memory, never copied again
+    for the worker pool.
     """
+    if alloc is None:
+        alloc = np.zeros
     rng = np.random.default_rng(seed)
     coords = []
     # banded structure, each diagonal kept with prob 0.7 (as the seed gen)
@@ -107,7 +122,19 @@ def large_row_net(n: int, seed: int = 0, band: int = 3,
         rows_d = rng.choice(n, size=k, replace=False).astype(np.int64)
         coords.append(np.stack([rows_d, np.full(k, c, dtype=np.int64)]))
     ij = np.concatenate(coords, axis=1)
-    flat = np.unique(ij[0] * np.int64(n) + ij[1])   # dedup + row-major sort
+    keys = ij[0] * np.int64(n) + ij[1]
+    if chunk_rows is None or chunk_rows >= n:
+        flat = np.unique(keys)          # dedup + row-major sort, one shot
+    else:
+        # partitioned key space: rows [lo, hi) own keys [lo*n, hi*n), so
+        # per-range uniques concatenate into exactly the global unique
+        parts = []
+        for lo in range(0, n, int(chunk_rows)):
+            hi = min(lo + int(chunk_rows), n)
+            sel = (ij[0] >= lo) & (ij[0] < hi)
+            if sel.any():
+                parts.append(np.unique(keys[sel]))
+        flat = np.concatenate(parts)
     i_arr, j_arr = flat // n, flat % n
     # row-net model: nodes = columns (weight = nnz), edges = rows with >= 2
     # distinct columns; isolated columns dropped (cf. row_net_hypergraph)
@@ -118,13 +145,21 @@ def large_row_net(n: int, seed: int = 0, band: int = 3,
     used = np.unique(j_arr)   # columns appearing in some kept edge
     remap = np.zeros(n, dtype=np.int64)
     remap[used] = np.arange(len(used), dtype=np.int64)
-    j_arr = remap[j_arr]
-    splits = np.flatnonzero(i_arr[1:] != i_arr[:-1]) + 1
-    edges = [tuple(seg.tolist()) for seg in np.split(j_arr, splits)
-             if len(seg)]
-    omega = np.maximum(col_nnz[used], 1.0).astype(np.float64)
-    return Hypergraph(n=len(used), edges=edges, omega=omega,
-                      name=name or f"spmv_rn_large_{n}", presorted=True)
+    # CSR straight out: i_arr is sorted, runs of equal i are the edges (and
+    # j ascends within a run, so ``presorted`` pin order holds); the output
+    # arrays come from ``alloc`` so they can live in shared memory
+    first = np.ones(len(i_arr), dtype=bool)
+    first[1:] = i_arr[1:] != i_arr[:-1]
+    starts = np.flatnonzero(first)
+    lens = np.diff(np.append(starts, len(i_arr)))
+    xpins = alloc(len(starts) + 1, np.int64)
+    np.cumsum(lens, out=xpins[1:])
+    pins = alloc(len(j_arr), np.int64)
+    pins[:] = remap[j_arr]
+    omega = alloc(len(used), np.float64)
+    omega[:] = np.maximum(col_nnz[used], 1.0)
+    return Hypergraph.from_csr(len(used), xpins, pins, omega=omega,
+                               name=name or f"spmv_rn_large_{n}")
 
 
 def spmv_dataset(kind: str = "fg", count: int = 10, seed: int = 0,

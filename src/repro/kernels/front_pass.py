@@ -30,6 +30,14 @@ Correctness contract (same as PR 3, property-tested in interpret mode):
     finds (the extra one proves the scan is dry; it is skipped when the
     final commit lands on the last visit position).  The counters obey
     ``commits <= syncs <= commits + pass_scans``, assertable in tests.
+  * **One device dispatch per committed move.**  The engine hook *queues*
+    mutations instead of dispatching them; the next ``find`` program folds
+    the newest queued mutation into its own dispatch (a no-op fold when
+    the queue is empty), so the commit->find cadence costs a single
+    dispatch where PR 6 paid two.  Only host-side phases that mutate
+    without a following find (the replication edge-guided phase) fall back
+    to standalone apply programs, counted in ``apply_dispatches`` -- zero
+    across any pure FM / node-sweep pass.
 
 Layout: candidate fronts are the flat (pair, edge) expansion -- for each
 visited node, P candidate masks x its incident edges -- packed into fixed
@@ -187,6 +195,9 @@ class DevicePartitionPass:
         mu_i[:self.E] = np.rint(state.mu).astype(np.int32)
         self._mu = jnp.asarray(mu_i)
         self._owner = np.repeat(np.arange(self.n), self.deg)  # bnd scatter
+        # mutation queue: host applies are *deferred* and fused into the
+        # next find program, so a committed move costs one dispatch, not two
+        self._pending: list[tuple[int, int, int]] = []
         self._refresh_from_host()
         self._fits = np.zeros((self.n + 1, self.P), dtype=bool)
         self._last_loads = None
@@ -198,12 +209,14 @@ class DevicePartitionPass:
         self.syncs = 0
         self.commits = 0
         self.pass_scans = 0
+        self.apply_dispatches = 0  # standalone apply programs dispatched
 
     # ------------------------------------------------------------ buffers
     def _refresh_from_host(self) -> None:
         """Full host -> device upload of uncov / lambdas / masks."""
         jnp = self._jnp
         st = self.state
+        self._pending.clear()   # host state already includes queued moves
         uncov_p = np.zeros((self.E + 1, self.nsub), dtype=np.int32)
         uncov_p[:self.E] = st.uncov[:, self.colmap]
         self._uncov = jnp.asarray(uncov_p)
@@ -222,16 +235,38 @@ class DevicePartitionPass:
 
     # -------------------------------------------------------- engine hook
     def apply(self, v: int, old: int, new: int) -> None:
-        """Mirror one host ``apply``/``undo`` mutation (no host sync)."""
-        jnp = self._jnp
+        """Mirror one host ``apply``/``undo`` mutation.
+
+        Deferred: the mutation is queued and fused into the *next* find
+        program (``_call_find``), so the common commit->find cadence costs
+        one device dispatch per move instead of two.  ``flush`` forces the
+        queue down when device buffers must be current with no find in
+        sight (tests, detach-and-inspect).
+        """
+        self._pending.append((int(v), int(old), int(new)))
+
+    def _edge_window(self, v: int) -> np.ndarray:
+        """v's incident edges padded to Dmax with the dummy edge E."""
         w = np.full(self.Dmax if self.Dmax else 1, self.E, dtype=np.int32)
-        d = int(self.deg[v])
-        if d:
-            w[:d] = self.inc_edges_np[self.xinc[v]:self.xinc[v] + d]
+        if v < self.n:
+            d = int(self.deg[v])
+            if d:
+                w[:d] = self.inc_edges_np[self.xinc[v]:self.xinc[v] + d]
+        return w
+
+    def _dispatch_apply(self, v: int, old: int, new: int) -> None:
+        jnp = self._jnp
         self._uncov, self._lam, self._masks = self._apply_fn(
             self._uncov, self._lam, self._masks,
-            jnp.int32(v), jnp.int32(old), jnp.int32(new), jnp.asarray(w),
-            self._contrib, self._pc)
+            jnp.int32(v), jnp.int32(old), jnp.int32(new),
+            jnp.asarray(self._edge_window(v)), self._contrib, self._pc)
+        self.apply_dispatches += 1
+
+    def flush(self) -> None:
+        """Dispatch every queued mutation as standalone apply programs."""
+        pending, self._pending = self._pending, []
+        for v, old, new in pending:
+            self._dispatch_apply(v, old, new)
 
     def _make_apply(self):
         jax, jnp = self._jax, self._jnp
@@ -283,7 +318,22 @@ class DevicePartitionPass:
 
         def find(uncov, lam, masks, mu, contrib, fits, prim, popcnt,
                  blk_edge, blk_pair, blk_node, blk_pos, active,
-                 nb, b0, start_pos, resume_p, maxrep):
+                 nb, b0, start_pos, resume_p, maxrep,
+                 av, aold, anew, ae_win):
+            # fused apply: fold the last queued host mutation into this
+            # program (av = n with aold == anew encodes "nothing pending" --
+            # diff is all zeros, ae_win all-dummy, masks[n] is the dummy
+            # row), then run the scan on the updated buffers
+            adiff = contrib[anew] - contrib[aold]
+            avalid = ae_win < self.E
+            uncov = uncov.at[ae_win].add(
+                jnp.where(avalid[:, None], adiff[None, :], 0))
+            arows = uncov[ae_win]
+            alam = jnp.min(
+                jnp.where(arows == 0, self._pc[None, :], _NO_COVER),
+                axis=1).astype(jnp.int32)
+            lam = lam.at[ae_win].set(jnp.where(avalid, alam, lam[ae_win]))
+            masks = masks.at[av].set(anew)
 
             def eval_block(b):
                 edges = blk_edge[b]
@@ -364,9 +414,11 @@ class DevicePartitionPass:
             _, pos, kind, q = jax.lax.while_loop(
                 cond, body,
                 (b0, jnp.int32(n), jnp.int32(0), jnp.int32(0)))
-            return pos, kind, q
+            # donated buffers ride back out; the stacked triple keeps the
+            # host read down to a single transfer
+            return uncov, lam, masks, jnp.stack([pos, kind, q])
 
-        return jax.jit(find)
+        return functools.partial(jax.jit, donate_argnums=(0, 1, 2))(find)
 
     # ------------------------------------------------------- block builder
     def _build_blocks(self, perm: np.ndarray) -> None:
@@ -469,12 +521,25 @@ class DevicePartitionPass:
     def _call_find(self, fn, b0: int, start_pos: int, resume_p: int,
                    maxrep: int, bnd_start: np.ndarray):
         jnp = self._jnp
-        out = fn(self._uncov, self._lam, self._masks, self._mu,
-                 self._contrib, self._fits_now(), self._prim, self._popcnt,
-                 self._blk_edge, self._blk_pair, self._blk_node,
-                 self._blk_pos, self._active_blocks(bnd_start),
-                 jnp.int32(self._nb), jnp.int32(b0), jnp.int32(start_pos),
-                 jnp.int32(resume_p), jnp.int32(maxrep))
+        # fold the newest queued mutation into this find (one dispatch per
+        # committed move); older queue entries -- only possible after host-
+        # side phases between passes -- still go out as standalone applies
+        if self._pending:
+            *older, (av, aold, anew) = self._pending
+            self._pending = []
+            for ov, oold, onew in older:
+                self._dispatch_apply(ov, oold, onew)
+        else:
+            av, aold, anew = self.n, 1, 1   # no-op: dummy row, zero diff
+        self._uncov, self._lam, self._masks, out = fn(
+            self._uncov, self._lam, self._masks, self._mu,
+            self._contrib, self._fits_now(), self._prim, self._popcnt,
+            self._blk_edge, self._blk_pair, self._blk_node,
+            self._blk_pos, self._active_blocks(bnd_start),
+            jnp.int32(self._nb), jnp.int32(b0), jnp.int32(start_pos),
+            jnp.int32(resume_p), jnp.int32(maxrep),
+            jnp.int32(av), jnp.int32(aold), jnp.int32(anew),
+            jnp.asarray(self._edge_window(av)))
         pos, kind, q = (int(x) for x in np.asarray(out))  # THE host sync
         self.syncs += 1
         return pos, kind, q

@@ -156,6 +156,11 @@ def test_device_mirror_tracks_engine_hook():
                 st_.undo()
             else:
                 st_.commit()
+        # hook mutations are queued for find-fusion; flush forces them
+        # down so the buffers can be inspected without a find
+        assert len(dev._pending) > 0
+        dev.flush()
+        assert dev.apply_dispatches > 0 and not dev._pending
         got_uncov = np.asarray(dev._uncov)[:dev.E]
         assert np.array_equal(got_uncov, st_.uncov[:, dev.colmap])
         assert np.array_equal(np.asarray(dev._masks)[:hg.n], st_.masks)
@@ -181,6 +186,9 @@ def test_sync_accounting_bound():
             dev.detach()
         assert dev.syncs > 0 and dev.commits > 0
         assert dev.commits <= dev.syncs <= dev.commits + dev.pass_scans
+        # fused dispatch: a pure FM sweep never pays a standalone apply --
+        # every committed move rides the next find program
+        assert dev.apply_dispatches == 0
         # replication sweeps obey the same bound
         st2 = PartitionState(hg, 4, masks=m0.copy())
         dev2 = device_pass(st2, cap, backend="jax")
@@ -192,6 +200,7 @@ def test_sync_accounting_bound():
         finally:
             dev2.detach()
         assert dev2.commits <= dev2.syncs <= dev2.commits + dev2.pass_scans
+        assert dev2.apply_dispatches == 0   # pure node sweeps fuse too
 
 
 def test_pallas_interpret_find_identity():
