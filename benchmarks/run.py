@@ -128,6 +128,7 @@ def main() -> None:
         "engine_scale": sched["engine"],
         "frontier_scale": sched["frontier"],
         "multilevel_scale": sched["multilevel"],
+        "split_scale": sched["split"],
         "device_resident": sched["device"],
         "cost_reduction": sched["table2"],
     }
@@ -159,6 +160,14 @@ def main() -> None:
         _emit(f"schedule_multilevel_{row['name']}", row["ml_seconds"],
               flat + f"ml_cost={row['ml_cost']:.0f};"
               f"S={row['ml_supersteps']};replicas={row['ml_replicas']}")
+    for row in sched["split"]:
+        guarded = (f"guarded={row['guarded_seconds']:.1f}s;"
+                   f"retired={row['guard_retired_seconds']:.1f}s;"
+                   f"not_worse={row['split_not_worse_than_guarded']};"
+                   if "guarded_seconds" in row else "")
+        _emit(f"schedule_split_{row['name']}", row["split_seconds"],
+              guarded + f"split_cost={row['split_cost']:.0f};"
+              f"S={row['split_supersteps']}")
 
     # ---- exact vs heuristic (paper §C.2.2) -------------------------------
     ex = ilp_vs_heuristic.run_all()
@@ -201,10 +210,20 @@ def parallel_smoke() -> None:
     print(json.dumps({"partition": partitioning.parallel_smoke()}, indent=1))
 
 
+def schedule_split_smoke() -> None:
+    """``run.py --schedule-split-smoke``: CI-sized proof of the guard
+    retirement -- the guard-off split-enabled V-cycle must not cost more
+    than the old guarded driver on replication-hungry psdd instances."""
+    from benchmarks import scheduling
+    print(json.dumps({"schedule": scheduling.split_smoke()}, indent=1))
+
+
 if __name__ == "__main__":
     if "--device-smoke" in sys.argv:
         device_smoke()
     elif "--parallel-smoke" in sys.argv:
         parallel_smoke()
+    elif "--schedule-split-smoke" in sys.argv:
+        schedule_split_smoke()
     else:
         main()

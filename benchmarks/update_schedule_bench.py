@@ -1,0 +1,57 @@
+"""Targeted BENCH_schedule.json refresh for the guard-retirement sections.
+
+Re-runs ``multilevel_scale`` (whose guard-free default now includes the
+split front) and the new ``split_scale`` section, then the single
+million-node sptrsv gate -- recorded in both sections from one run (at
+that size both sections measure the identical default driver, so a second
+multi-hour run would duplicate, not verify).  Checkpoints the JSON after
+each section so a partial run still lands its finished rows.
+"""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import scheduling as S  # noqa: E402
+
+PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_schedule.json"
+
+
+def main() -> None:
+    bench = json.loads(PATH.read_text())
+
+    if "--skip-multilevel" not in sys.argv:
+        ml = S.multilevel_scale(sizes=[
+            ("sptrsv", 3000), ("sptrsv", 6000), ("psdd", 4000),
+            ("sptrsv", 50_000), ("psdd", 50_000), ("sptrsv", 100_000)])
+        bench["multilevel_scale"] = ml
+        PATH.write_text(json.dumps(bench, indent=1))
+        print("multilevel_scale done", flush=True)
+    ml = bench["multilevel_scale"]
+
+    sp = S.split_scale(sizes=[
+        ("sptrsv", 2000), ("sptrsv", 6000), ("sptrsv", 8192),
+        ("psdd", 4000), ("sptrsv", 50_000), ("sptrsv", 100_000)])
+    bench["split_scale"] = sp
+    PATH.write_text(json.dumps(bench, indent=1))
+    print("split_scale (<= 100k) done", flush=True)
+
+    big = S.split_scale(sizes=[("sptrsv", 1_000_000)])
+    row = big[0]
+    bench["split_scale"] = sp + big
+    bench["multilevel_scale"] = ml + [{
+        "name": row["name"], "n": row["n"], "edges": row["edges"],
+        "P": row["P"], "g": row["g"], "L": row["L"],
+        "ml_seconds": row["split_seconds"],
+        "vcycle_cost": row["split_cost"], "ml_cost": row["split_cost"],
+        "ml_supersteps": row["split_supersteps"],
+        "ml_replicas": row["split_replicas"],
+    }]
+    PATH.write_text(json.dumps(bench, indent=1))
+    print("n=1e6 done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

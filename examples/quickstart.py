@@ -19,13 +19,14 @@ per-level cost trajectory plus the flat-heuristic comparison.
 Multilevel scheduling path (PR 5):
 
     PYTHONPATH=src python examples/quickstart.py --multilevel-schedule
-        [--n 20000]
+        [--n 20000] [--no-splits] [--workers W]
 
 runs the acyclic-coarsening scheduling V-cycle (funnel/same-level
 clustering -> coarse replicated solve -> schedule projection ->
-frontier-priced refinement) on a streaming sptrsv DAG and prints the
-per-level cost trajectory; at sizes where the flat path is tractable it
-also prints the comparison.
+frontier-priced refinement, superstep-split front included unless
+--no-splits) on a streaming sptrsv DAG and prints the per-level cost
+trajectory; --workers shards coarsening's scoring pass over a
+shared-memory pool (bit-identical result).
 
 Device-resident refinement path (PR 6):
 
@@ -86,18 +87,25 @@ def multilevel_demo(n: int, P: int = 8, eps: float = 0.05,
 
 
 def multilevel_schedule_demo(n: int, P: int = 8, g: float = 4.0,
-                             L: float = 20.0) -> None:
+                             L: float = 20.0, splits: bool = True,
+                             workers: int | None = None) -> None:
     """Schedule a production-scale sptrsv DAG with the multilevel V-cycle."""
-    from repro.core.schedule import BspInstance, best_replicated_schedule
+    from repro.core.schedule import (BspInstance,
+                                     MultilevelScheduleOptions,
+                                     best_replicated_schedule)
     from repro.datagen import large_sptrsv_dag
 
     dag = large_sptrsv_dag(n, band=48, seed=0)
     print(f"multilevel schedule: {dag.name} n={dag.n} "
-          f"edges={dag.num_edges} P={P} g={g} L={L}")
+          f"edges={dag.num_edges} P={P} g={g} L={L} "
+          f"splits={'on' if splits else 'off'}"
+          + (f" workers={workers}" if workers else ""))
     stats: list = []
     t0 = time.perf_counter()
-    sched = best_replicated_schedule(BspInstance(dag, P=P, g=g, L=L),
-                                     seed=0, multilevel=True, stats=stats)
+    sched = best_replicated_schedule(
+        BspInstance(dag, P=P, g=g, L=L), seed=0, multilevel=True,
+        stats=stats, workers=workers,
+        ml_opts=MultilevelScheduleOptions(superstep_splits=splits))
     dt = time.perf_counter() - t0
     for row in stats:
         if "level" in row:
@@ -178,15 +186,21 @@ def main() -> None:
                     help="instance size for --multilevel[-schedule]/--device "
                          "(defaults: 8192 / 20000 / 4096)")
     ap.add_argument("--workers", type=int, default=None,
-                    help="shared-memory worker processes for --multilevel "
-                         "(sharded coarsening + refinement; default serial)")
+                    help="shared-memory worker processes for --multilevel / "
+                         "--multilevel-schedule (sharded coarsening [+ "
+                         "refinement for partitioning]; default serial)")
+    ap.add_argument("--no-splits", action="store_true",
+                    help="disable the superstep-split refinement front in "
+                         "--multilevel-schedule (PR 9 default: on)")
     args = ap.parse_args()
 
     if args.multilevel:
         multilevel_demo(args.n or 8192, workers=args.workers)
         return
     if args.multilevel_schedule:
-        multilevel_schedule_demo(args.n or 20_000)
+        multilevel_schedule_demo(args.n or 20_000,
+                                 splits=not args.no_splits,
+                                 workers=args.workers)
         return
     if args.device:
         device_demo(args.n or 4096, backend=args.backend)

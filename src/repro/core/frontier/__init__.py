@@ -27,11 +27,14 @@ from .partition_front import (GainCache, add_replica_candidates,
                               set_backend)
 from .schedule_front import (apply_sm_mutations, apply_sr_mutations,
                              commit_superstep_merge,
-                             commit_superstep_replication, device_windows,
+                             commit_superstep_replication,
+                             commit_superstep_split, device_windows,
                              node_move_targets, price_comm_moves,
                              price_comp_moves, price_node_moves,
                              price_superstep_merge,
-                             price_superstep_replication, sm_front, sr_front)
+                             price_superstep_replication,
+                             price_superstep_split, sm_front, split_front,
+                             sr_front)
 
 __all__ = [
     "GainCache", "add_replica_candidates", "connected_add_candidates",
@@ -39,8 +42,9 @@ __all__ = [
     "lookahead_window", "move_candidates", "price_mask_front",
     "refresh_boundary_window", "set_backend",
     "apply_sm_mutations", "apply_sr_mutations", "commit_superstep_merge",
-    "commit_superstep_replication", "device_windows", "node_move_targets",
+    "commit_superstep_replication", "commit_superstep_split",
+    "device_windows", "node_move_targets",
     "price_comm_moves", "price_comp_moves", "price_node_moves",
-    "price_superstep_merge", "price_superstep_replication", "sm_front",
-    "sr_front",
+    "price_superstep_merge", "price_superstep_replication",
+    "price_superstep_split", "sm_front", "split_front", "sr_front",
 ]

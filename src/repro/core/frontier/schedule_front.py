@@ -464,21 +464,27 @@ def apply_sm_mutations(sched, s: int, comms_at=None) -> bool:
 class _CowComms:
     """Copy-on-write view of a comm dict: reads fall through to the base,
     writes land in an overlay (None = removed).  Supports exactly the
-    operations the SM sequence performs -- ``get`` / ``in`` / ``[]`` /
-    ``pop`` / ``[] =`` -- so building a pricing sim is O(1) instead of
-    O(comms)."""
+    operations the SM/split sequences perform -- ``get`` / ``in`` / ``[]``
+    / ``pop`` / ``[] =`` -- so building a pricing sim is O(1) instead of
+    O(comms).  ``map_base`` (optional) is applied to base *values* on
+    read: the split sim renumbers base comm positions into post-shift
+    coordinates without materializing anything."""
 
-    __slots__ = ("base", "over")
+    __slots__ = ("base", "over", "map_base")
 
-    def __init__(self, base: dict) -> None:
+    def __init__(self, base: dict, map_base=None) -> None:
         self.base = base
         self.over: dict = {}
+        self.map_base = map_base
 
     def get(self, k, default=None):
         if k in self.over:
             v = self.over[k]
             return default if v is None else v
-        return self.base.get(k, default)
+        v = self.base.get(k)
+        if v is None:
+            return default
+        return v if self.map_base is None else self.map_base(v)
 
     def __contains__(self, k) -> bool:
         return self.get(k) is not None
@@ -498,9 +504,10 @@ class _CowComms:
         return v
 
     def items(self):
+        mb = self.map_base
         for k, v in self.base.items():
             if k not in self.over:
-                yield k, v
+                yield k, (v if mb is None else mb(v))
         for k, v in self.over.items():
             if v is not None:
                 yield k, v
@@ -668,3 +675,178 @@ def commit_superstep_replication(sched: ScheduleState, s: int, p1: int,
         sched.rollback()
         raise
     sched.commit()
+
+
+# --------------------------------------------------------------------------
+# Superstep-split front (inverse of SM)
+# --------------------------------------------------------------------------
+
+class _SplitSim:
+    """Virtual overlay over a ``ScheduleState`` exposing exactly the reads
+    and mutations ``apply_split_mutations`` performs, without touching the
+    real schedule.  Mutations accumulate cost cells; the price is
+    ``base._delta_cells(cells)`` at the end.
+
+    The sim lives in *post-split* coordinates once ``shift_tail_bulk`` has
+    run: base positions ``t > s`` read as ``t + 1`` (comms through the
+    ``_CowComms`` value map, assignments through the lazy copy-on-write
+    dicts -- every assign read in the split sequence happens post-shift).
+    Cells map post positions back onto base rows: ``t <= s`` hits row t,
+    the inserted superstep ``s + 1`` hits the virtual row at ``base.S``
+    (``_delta_cells`` folds everything at exactly that index into one
+    all-zero row -- the correct model of the one new superstep), and
+    ``t >= s + 2`` hits base row ``t - 1`` -- the row whose content it is
+    after the pure renumbering.  The renumbering itself moves no load
+    between rows, so ``shift_tail_bulk`` emits **no** cells: the tail
+    shift prices to exactly zero, by construction rather than by O(S * P)
+    transfer pairs.  Single-use: one sim per priced candidate.
+    """
+
+    def __init__(self, base: ScheduleState, s: int) -> None:
+        self.base = base
+        self.inst = base.inst
+        self.S = base.S
+        self.cells: list[tuple[str, int, int, float]] = []
+        self._split = s
+        self._shifted = False
+        self.comms = _CowComms(base.comms, map_base=self._map_comm)
+        self._assign: dict[int, dict[int, int]] = {}   # copy-on-write
+
+    def _map_comm(self, val):
+        src, t = val
+        if self._shifted and t > self._split:
+            return (src, t + 1)
+        return val
+
+    def _cell_s(self, t: int) -> int:
+        """Base row a mutation at post-shift position t lands on."""
+        if not self._shifted or t <= self._split:
+            return t
+        if t == self._split + 1:
+            return self.base.S   # the inserted superstep: virtual row
+        return t - 1
+
+    # ------------------------------------------------------------- views
+    @property
+    def assign(self):
+        return self
+
+    def __getitem__(self, v: int) -> dict[int, int]:
+        got = self._assign.get(v)
+        if got is None:
+            base = self.base.assign[v]
+            if self._shifted:
+                sp = self._split
+                got = {p: (t + 1 if t > sp else t) for p, t in base.items()}
+            else:
+                got = dict(base)
+            self._assign[v] = got
+        return got
+
+    # --------------------------------------------------------- mutations
+    def shift_tail_bulk(self, s: int) -> None:
+        assert s == self._split and not self._shifted
+        self._shifted = True
+        self.S += 1
+
+    def add_comp(self, v: int, p: int, t: int) -> None:
+        av = self[v]
+        assert p not in av
+        av[p] = t
+        self.cells.append(("work", self._cell_s(t), p,
+                           self.inst.dag.omega[v]))
+
+    def remove_comp(self, v: int, p: int) -> None:
+        t = self[v].pop(p)
+        self.cells.append(("work", self._cell_s(t), p,
+                           -self.inst.dag.omega[v]))
+
+    def add_comm(self, v: int, src: int, dst: int, t: int) -> None:
+        assert (v, dst) not in self.comms
+        self.comms[(v, dst)] = (src, t)
+        mu = self.inst.dag.mu[v]
+        cs = self._cell_s(t)
+        self.cells.append(("sent", cs, src, mu))
+        self.cells.append(("recv", cs, dst, mu))
+
+    def remove_comm(self, v: int, dst: int) -> None:
+        src, t = self.comms.pop((v, dst))
+        mu = self.inst.dag.mu[v]
+        cs = self._cell_s(t)
+        self.cells.append(("sent", cs, src, -mu))
+        self.cells.append(("recv", cs, dst, -mu))
+
+
+def split_front(sched: ScheduleState, s: int, level,
+                max_candidates: int = 8) -> list[tuple[int, list]]:
+    """Candidate bipartitions of superstep s's compute phase, as
+    ``(cut_level, late)`` pairs in ascending cut order.
+
+    Cut points are the distinct topological levels present in the phase
+    (``level`` from ``list_sched.dag_levels``): candidate ``cut`` delays
+    every ``(node, proc)`` entry whose node sits at level >= cut into the
+    new superstep.  Cutting by level guarantees structural feasibility --
+    an edge u -> c inside the phase implies ``level[c] > level[u]``, so a
+    delayed parent's children delay with it, and every replica of a
+    delayed node delays together.  With more than ``max_candidates``
+    distinct cut levels a deterministic evenly-spaced subset is priced
+    (the front stays bounded per superstep; no RNG, so engine and oracle
+    enumerate identically).  ``late`` is sorted -- the shared mutation
+    order of ``apply_split_mutations``.
+    """
+    P = sched.inst.P
+    members = [(level[v], v, p)
+               for p in range(P) for v in sched.comp[s][p]]
+    lvls = sorted({l for (l, _v, _p) in members})
+    if len(lvls) < 2:
+        return []
+    cuts = lvls[1:]
+    k = len(cuts)
+    if k > max_candidates:
+        idxs = sorted({(i * (k - 1)) // (max_candidates - 1)
+                       for i in range(max_candidates)})
+        cuts = [cuts[i] for i in idxs]
+    front = []
+    for cut in cuts:
+        late = sorted((v, p) for (l, v, p) in members if l >= cut)
+        front.append((cut, late))
+    return front
+
+
+def price_superstep_split(sched: ScheduleState, s: int, late,
+                          pre=None) -> float | None:
+    """Pure price of splitting superstep s's compute phase (``late`` pairs
+    delay into a new superstep ``s + 1``).
+
+    Replays ``apply_split_mutations`` against a virtual overlay, so the
+    real schedule (and its undo log) is never touched; returns the
+    *pre-prune* cost delta -- the quantity the winner rule ranks by;
+    pruning after a commit only lowers it further -- or None when some
+    re-derived comm cannot reach a consumer in time (the transactional
+    trial would roll back).  ``pre`` forwards the sorted pre-mutation comm
+    snapshot (see ``apply_split_mutations``); on integer weights the price
+    equals the transactional replay's cost change bit-for-bit, the same
+    contract as ``price_superstep_merge``.
+    """
+    from ..schedule.engine import apply_split_mutations
+    sim = _SplitSim(sched, s)
+    if not apply_split_mutations(sim, s, late, pre):
+        return None
+    return sched._delta_cells(sim.cells)
+
+
+def commit_superstep_split(sched: ScheduleState, s: int, late) -> None:
+    """Replay a priced split winner through the transaction machinery,
+    then prune (the commit is never worse than its price) and compact --
+    so superstep indices never drift from the oracle's."""
+    from ..schedule.engine import apply_split_mutations
+    sched.begin()
+    try:
+        if not apply_split_mutations(sched, s, late):
+            raise RuntimeError("priced split became infeasible at commit")
+        sched.prune_useless_comms()
+    except BaseException:
+        sched.rollback()
+        raise
+    sched.commit()
+    sched.compact()

@@ -222,6 +222,17 @@ def _pref_task(arg):
     return _match_pref(hg, max_edge_size, lo, hi)
 
 
+def _sched_pair_task(arg):
+    """Worker: same-level pair generation for one owner-node range
+    (bit-identity contract documented on
+    ``schedule.multilevel._pair_parts``)."""
+    refs, max_fanout, lo, hi = arg
+    from ..schedule.multilevel import _pair_parts
+    xch, ch_arr, xpar, par_arr, mu, level = (attach_array(r) for r in refs)
+    return _pair_parts(xch, ch_arr, xpar, par_arr, mu, level,
+                       max_fanout, lo, hi)
+
+
 def _refine_task(arg):
     """Worker: refine one node shard against a state snapshot.
 
@@ -421,6 +432,45 @@ def parallel_match_pref(hg: Hypergraph, ctx: ParallelContext,
     except Exception:
         ctx.failed = True
         return _match_pref(hg, max_edge_size)
+
+
+def parallel_pair_parts(dag, xch: np.ndarray, level: np.ndarray,
+                        ctx: ParallelContext, max_fanout: int) -> list:
+    """Sharded same-level pair generation for the scheduling V-cycle's
+    coarsening (``schedule.multilevel.same_level_matching``).
+
+    Shares the DAG's flat group arrays once per call (coarsening builds a
+    fresh ``Dag`` and level array every round, so there is nothing to
+    cache across calls) and maps ``_pair_parts`` over contiguous
+    owner-node ranges.  Returns the per-shard 6-tuples in shard order;
+    the caller concatenates child blocks then parent blocks, which equals
+    the serial arrays byte-for-byte (see ``_pair_parts``).  Raises on
+    pool trouble -- the call site flips ``ctx.failed`` and goes serial.
+    """
+    n = int(dag.n)
+    refs = []
+    for a in (xch, dag.edge_dst, dag.xpar, dag.par_arr,
+              np.asarray(dag.mu, dtype=np.float64),
+              np.asarray(level, dtype=np.int64)):
+        _, ref = ctx.reg.share(a)
+        refs.append(ref)
+    refs = tuple(refs)
+    # balance shards by quadratic group work (pairs scale with len^2)
+    lens_ch = np.diff(xch)
+    lens_pa = np.diff(dag.xpar)
+    work = np.ones(n, dtype=np.int64)
+    for lens in (lens_ch, lens_pa):
+        ok = (lens >= 2) & (lens <= max_fanout)
+        work[ok] += (lens[ok] * lens[ok]).astype(np.int64)
+    cum = np.cumsum(work)
+    W = max(1, min(ctx.workers, n))
+    targets = cum[-1] / W * np.arange(1, W)
+    cuts = np.searchsorted(cum, targets, side="left") + 1
+    bounds = np.maximum.accumulate(
+        np.concatenate(([0], np.minimum(cuts, n), [n])))
+    tasks = [(refs, int(max_fanout), int(bounds[w]), int(bounds[w + 1]))
+             for w in range(len(bounds) - 1) if bounds[w + 1] > bounds[w]]
+    return ctx.run(_sched_pair_task, tasks)
 
 
 def parallel_refine(hg: Hypergraph, st: PartitionState, P: int, eps: float,

@@ -7,7 +7,8 @@ from .multilevel import MultilevelScheduleOptions, multilevel_schedule
 from .replication import (AdvancedOptions, advanced_heuristic,
                           best_replicated_schedule,
                           basic_heuristic, batch_replication_pass,
-                          superstep_merge_pass, superstep_replication_pass)
+                          superstep_merge_pass, superstep_replication_pass,
+                          superstep_split_pass)
 
 __all__ = [
     "EPS", "BspInstance", "Schedule", "ScheduleState",
@@ -18,4 +19,5 @@ __all__ = [
     "MultilevelScheduleOptions", "multilevel_schedule",
     "superstep_merge_pass",
     "superstep_replication_pass",
+    "superstep_split_pass",
 ]

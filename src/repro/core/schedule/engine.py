@@ -76,18 +76,9 @@ def _retop(row):
     return [m1, i1, m2]
 
 
-def canonical_comm_plan(dag, assign) -> list[tuple[int, int, int, int]]:
-    """The canonical communication set of a compute assignment, as
-    ``(value, src, dst, superstep)`` rows sorted by ``(value, dst)``.
-
-    One comm per (value, consuming processor): skipped when the consumer
-    computes the value locally in time, sourced at the earliest replica
-    (ties to the lowest processor id), placed at the latest valid
-    superstep (first use - 1).  Single home of the rule -- both
-    ``list_sched.derive_comms`` (live rebuild) and
-    ``ScheduleState.from_projection`` (bulk expansion) consume it, so the
-    two paths cannot drift.
-    """
+def _canonical_comm_plan_scalar(dag, assign) -> list[tuple[int, int, int, int]]:
+    """Scalar reference implementation of ``canonical_comm_plan`` (kept as
+    the pinned oracle for the vectorized path; see tests)."""
     first_use: dict[tuple[int, int], int] = {}
     parents = dag.parents
     for c in range(dag.n):
@@ -108,6 +99,183 @@ def canonical_comm_plan(dag, assign) -> list[tuple[int, int, int, int]]:
             f"value {v} for proc {p} not producible in time"
         plan.append((v, src, p, s_use - 1))
     return plan
+
+
+# cap on the dense (value, processor) scratch tables of the vectorized plan;
+# past it (n * P ~ 2^27 cells ~ 1 GiB of int64) fall back to the dict path
+_PLAN_DENSE_CAP = 1 << 27
+# expanded (assignment x parent) rows are processed in blocks of this many
+# entries so peak scratch memory stays bounded at million-node projections
+_PLAN_BLOCK = 1 << 22
+
+
+def _canonical_comm_plan_arrays(dag, assign):
+    """Vectorized core of ``canonical_comm_plan``: returns four flat int64
+    arrays ``(value, src, dst, superstep)``, rows sorted by (value, dst) --
+    bit-identical content to ``_canonical_comm_plan_scalar``.
+
+    One bincount/sort pass over the flat parents-CSR instead of a python
+    loop per (assignment x parent): per-(value, proc) first uses fold via a
+    blocked ``np.minimum.at`` (min is order-independent, so blocking cannot
+    change results), the earliest replica per value comes from one lexsort
+    by (value, superstep, proc), and ascending ``np.flatnonzero`` over the
+    dense first-use table reproduces the scalar ``sorted(first_use)``
+    emission order exactly.
+    """
+    import numpy as np
+
+    n = dag.n
+    counts = np.fromiter((len(a) for a in assign), dtype=np.int64, count=n)
+    m = int(counts.sum())
+    z = np.zeros(0, dtype=np.int64)
+    if m == 0:
+        return z, z, z, z
+    an_node = np.repeat(np.arange(n, dtype=np.int64), counts)
+    an_p = np.fromiter((p for a in assign for p in a),
+                       dtype=np.int64, count=m)
+    an_s = np.fromiter((s for a in assign for s in a.values()),
+                       dtype=np.int64, count=m)
+    P = int(an_p.max()) + 1
+    if n * P > _PLAN_DENSE_CAP:
+        plan = _canonical_comm_plan_scalar(dag, assign)
+        if not plan:
+            return z, z, z, z
+        arr = np.asarray(plan, dtype=np.int64)
+        return arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3]
+    xpar, par_arr = dag.xpar, dag.par_arr
+    indeg = np.diff(xpar)
+    sentinel = np.iinfo(np.int64).max
+    first_use = np.full(n * P, sentinel, dtype=np.int64)
+    reps = indeg[an_node]
+    cum = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(reps, out=cum[1:])
+    start = 0
+    while start < m:
+        end = int(np.searchsorted(cum, cum[start] + _PLAN_BLOCK, "left"))
+        end = min(m, max(end, start + 1))
+        tot = int(cum[end] - cum[start])
+        if tot:
+            rows = np.repeat(np.arange(start, end, dtype=np.int64),
+                             reps[start:end])
+            within = cum[start] + np.arange(tot, dtype=np.int64) - cum[rows]
+            par = par_arr[xpar[an_node[rows]] + within]
+            np.minimum.at(first_use, par * P + an_p[rows], an_s[rows])
+        start = end
+    # local compute superstep per (value, proc); at most one s per pair
+    comp_s = np.full(n * P, sentinel, dtype=np.int64)
+    comp_s[an_node * P + an_p] = an_s
+    # earliest replica per value: min (superstep, proc)
+    order = np.lexsort((an_p, an_s, an_node))
+    lead = np.ones(m, dtype=bool)
+    lead[1:] = an_node[order][1:] != an_node[order][:-1]
+    src_of = np.full(n, -1, dtype=np.int64)
+    ssrc_of = np.full(n, sentinel, dtype=np.int64)
+    src_of[an_node[order][lead]] = an_p[order][lead]
+    ssrc_of[an_node[order][lead]] = an_s[order][lead]
+    keys = np.flatnonzero(first_use != sentinel)  # ascending == sorted (v, p)
+    v_k, p_k = keys // P, keys % P
+    s_use = first_use[keys]
+    need = comp_s[keys] > s_use  # no local compute in time
+    v_k, p_k, s_use = v_k[need], p_k[need], s_use[need]
+    late = ssrc_of[v_k] >= s_use
+    assert not late.any(), \
+        f"value {int(v_k[late.argmax()]) if late.any() else -1} " \
+        "not producible in time"
+    return v_k, src_of[v_k], p_k, s_use - 1
+
+
+def canonical_comm_plan(dag, assign) -> list[tuple[int, int, int, int]]:
+    """The canonical communication set of a compute assignment, as
+    ``(value, src, dst, superstep)`` rows sorted by ``(value, dst)``.
+
+    One comm per (value, consuming processor): skipped when the consumer
+    computes the value locally in time, sourced at the earliest replica
+    (ties to the lowest processor id), placed at the latest valid
+    superstep (first use - 1).  Single home of the rule -- both
+    ``list_sched.derive_comms`` (live rebuild) and
+    ``ScheduleState.from_projection`` (bulk expansion) consume it, so the
+    two paths cannot drift.  The body is the vectorized
+    ``_canonical_comm_plan_arrays`` (one bincount/sort pass over flat edge
+    arrays); ``_canonical_comm_plan_scalar`` pins its output bit-for-bit.
+    """
+    v, src, dst, t = _canonical_comm_plan_arrays(dag, assign)
+    return list(zip(v.tolist(), src.tolist(), dst.tolist(), t.tolist()))
+
+
+def apply_split_mutations(sched, s: int, late, pre=None) -> bool:
+    """Execute the superstep-split mutation sequence on any schedule object
+    exposing the primitive-op protocol (engine ``ScheduleState``, reference
+    ``Schedule``, or the pricing sim) -- shared so the engine and oracle
+    trajectories stay bit-identical, exactly the SM/SR contract.
+
+    The split is the inverse of the SM merge: every compute phase after
+    ``s`` shifts one superstep later (opening an empty superstep ``s + 1``),
+    the ``late`` pairs -- sorted ``(node, proc)`` compute entries of
+    superstep ``s`` -- delay into the new superstep, and the comms of every
+    *affected* value (delayed nodes, parents of delayed nodes, and values
+    with a comm in phase ``s``) are re-derived canonically per the
+    ``derive_comms`` rule.  The re-derivation is the gain mechanism: the
+    merged comm phase at ``s`` redistributes between phases ``s`` and
+    ``s + 1`` (an h-relation split, trading ``g*h`` against ``L``), while
+    delayed values' phase-``s`` comms -- whose source would no longer be
+    computed in time -- are re-placed at later, valid phases.  Returns
+    False when some affected value cannot reach a consumer in time (the
+    candidate is infeasible); the caller prices on a sim or rolls back.
+
+    Determinism contract: supersteps shift in descending order with nodes
+    ascending per cell, pre-mutation comms are walked in sorted key order,
+    and affected values re-derive ascending -- every consumer (engine
+    transaction, oracle copy, pricing sim) sees the identical sequence.
+    ``pre`` optionally supplies the sorted pre-mutation comm snapshot so a
+    pricing sweep sorts the comm dict once per round, not per candidate.
+    """
+    dag = sched.inst.dag
+    P = sched.inst.P
+    if pre is None:
+        pre = sorted(sched.comms.items())
+    dsts_of: dict[int, list[int]] = {}
+    affected = set()
+    for (v, dst), (_src, t) in pre:
+        dsts_of.setdefault(v, []).append(dst)
+        if t == s:
+            affected.add(v)
+    for (v, _p) in late:
+        affected.add(v)
+        affected.update(dag.parents[v])
+    S0 = sched.S
+    bulk = getattr(sched, "shift_tail_bulk", None)
+    if bulk is not None:
+        bulk(s)  # pricing sim: zero-delta renumbering, no per-node traffic
+    else:
+        for t in range(S0 - 1, s, -1):
+            for p in range(P):
+                for v in sorted(sched.comp[t][p]):
+                    sched.remove_comp(v, p)
+                    sched.add_comp(v, p, t + 1)
+        for (v, dst), (_src, t) in pre:
+            if t > s:
+                sched.move_comm(v, dst, t + 1)
+    for (v, p) in late:
+        sched.remove_comp(v, p)
+        sched.add_comp(v, p, s + 1)
+    for u in sorted(affected):
+        for dst in dsts_of.get(u, ()):
+            sched.remove_comm(u, dst)
+        first_use: dict[int, int] = {}
+        for c in dag.children[u]:
+            for q, t in sched.assign[c].items():
+                cur = first_use.get(q)
+                if cur is None or t < cur:
+                    first_use[q] = t
+        av = sched.assign[u]
+        for q, s_use in sorted(first_use.items()):
+            if av.get(q, INF) <= s_use:
+                continue  # locally computed in time
+            src, s_src = min(av.items(), key=lambda x: (x[1], x[0]))
+            if s_src >= s_use:
+                return False
+            sched.add_comm(u, src, q, s_use - 1)
+    return True
 
 
 class ScheduleState:
@@ -674,38 +842,48 @@ class ScheduleState:
             raise ValueError("cmap must have shape (n,)")
         assert coarse.inst.P == P, "fine and coarse instances disagree on P"
         sched = cls(inst, coarse.S)
-        # per-cluster assignment lists, sorted once (deterministic order)
+        # per-cluster assignment lists, sorted once (deterministic order),
+        # flattened so the member-wise expansion is one vectorized gather
+        # (ascending node id, then sorted (p, s) -- the exact input order
+        # the bincounts below need for bit-identity with a primitive build)
         cl_items = [sorted(a.items()) for a in coarse.assign]
-        idx_w: list[int] = []
-        w_v: list[int] = []
+        k_arr = np.fromiter((len(ci) for ci in cl_items), dtype=np.int64,
+                            count=len(cl_items))
+        cl_off = np.zeros(len(cl_items) + 1, dtype=np.int64)
+        np.cumsum(k_arr, out=cl_off[1:])
+        cl_p = np.fromiter((p for ci in cl_items for p, _ in ci),
+                           dtype=np.int64, count=int(cl_off[-1]))
+        cl_s = np.fromiter((s for ci in cl_items for _, s in ci),
+                           dtype=np.int64, count=int(cl_off[-1]))
+        counts = k_arr[cmap]
+        node_rep = np.repeat(np.arange(dag.n, dtype=np.int64), counts)
+        cum = np.zeros(dag.n + 1, dtype=np.int64)
+        np.cumsum(counts, out=cum[1:])
+        pos = cl_off[cmap[node_rep]] \
+            + np.arange(len(node_rep), dtype=np.int64) - cum[node_rep]
+        p_arr, s_arr = cl_p[pos], cl_s[pos]
         assign, comp = sched.assign, sched.comp
-        for v in range(dag.n):
-            av = assign[v]
-            for p, s in cl_items[cmap[v]]:
-                av[p] = s
-                comp[s][p].add(v)
-                idx_w.append(s * P + p)
-                w_v.append(v)
-        idx_s: list[int] = []
-        idx_r: list[int] = []
-        c_v: list[int] = []
+        for v, p, s in zip(node_rep.tolist(), p_arr.tolist(),
+                           s_arr.tolist()):
+            assign[v][p] = s
+            comp[s][p].add(v)
+        idx_w = s_arr * P + p_arr
         comms, src_index = sched.comms, sched.src_index
-        for (v, src, p, t) in canonical_comm_plan(dag, assign):
+        c_v, c_src, c_dst, c_t = _canonical_comm_plan_arrays(dag, assign)
+        for v, src, p, t in zip(c_v.tolist(), c_src.tolist(),
+                                c_dst.tolist(), c_t.tolist()):
             comms[(v, p)] = (src, t)
             src_index[(v, src)].add(p)
-            idx_s.append(t * P + src)
-            idx_r.append(t * P + p)
-            c_v.append(v)
+        idx_s = c_t * P + c_src
+        idx_r = c_t * P + c_dst
         # bulk row rebuild: bincount accumulates in input order, which is
         # exactly the sequential add_comp/add_comm order above
         cells = coarse.S * P
-        work = np.bincount(np.asarray(idx_w, dtype=np.int64),
-                           weights=dag.omega[w_v], minlength=cells)
+        work = np.bincount(idx_w, weights=dag.omega[node_rep],
+                           minlength=cells)
         mu_c = dag.mu[c_v]
-        sent = np.bincount(np.asarray(idx_s, dtype=np.int64),
-                           weights=mu_c, minlength=cells)
-        recv = np.bincount(np.asarray(idx_r, dtype=np.int64),
-                           weights=mu_c, minlength=cells)
+        sent = np.bincount(idx_s, weights=mu_c, minlength=cells)
+        recv = np.bincount(idx_r, weights=mu_c, minlength=cells)
         sched.work = work.reshape(coarse.S, P).tolist()
         sched.sent = sent.reshape(coarse.S, P).tolist()
         sched.recv = recv.reshape(coarse.S, P).tolist()
@@ -747,8 +925,14 @@ class ScheduleState:
         return other
 
     # ------------------------------------------------------------ invariants
-    def check(self) -> None:
-        """Assert every derived quantity against a from-scratch rebuild."""
+    def check(self, require_compact: bool = False) -> None:
+        """Assert every derived quantity against a from-scratch rebuild.
+
+        With ``require_compact=True`` additionally assert the no-empty-
+        superstep invariant: every superstep holds at least one compute
+        entry or comm, so superstep indices cannot drift between the
+        engine and the oracle across winner-commit rounds (split/merge
+        passes run ``compact()`` after each committed winner)."""
         P = self.inst.P
         dag = self.inst.dag
         work = [[0.0] * P for _ in range(self.S)]
@@ -787,3 +971,8 @@ class ScheduleState:
             for dst in dsts:
                 assert self.comms.get((v, dst), (None,))[0] == src, \
                     "src_index stale entry"
+        if require_compact:
+            for s in range(self.S):
+                assert any(self.comp[s][p] for p in range(P)) \
+                    or any(work[s]) or any(sent[s]) or any(recv[s]), \
+                    f"empty superstep {s} survived compact"

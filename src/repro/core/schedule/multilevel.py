@@ -42,16 +42,25 @@ Pipeline (one V-cycle)::
               layer, then bounded rounds of the advanced heuristic's
               winner-commit SM/BR/SR fronts.
 
-Cost safety: refinement only ever applies strictly improving moves, at or
-below ``coarsest_n`` the driver *is* the flat heuristic (exact-equality
-fallthrough), and up to ``flat_guard_n`` it additionally runs the flat
-path and keeps the cheaper schedule -- so the result is never worse than
-flat wherever both paths are tractable, by construction.  On sptrsv the
-pure V-cycle (guard disabled) beats flat outright; on replication-hungry
-psdd circuits the flat search can win its basin, which is exactly what
-the guard hedges -- both pinned by
-``tests/test_schedule_multilevel.py`` and measured at scale by
-``benchmarks/scheduling.py::multilevel_scale``.
+Cost safety: refinement only ever applies strictly improving moves, and at
+or below ``coarsest_n`` the driver *is* the flat heuristic (exact-equality
+fallthrough).  The ``flat_guard_n`` hedge -- run the flat path too and keep
+the cheaper schedule -- is retired by default (``flat_guard_n = 0``, PR 9):
+with the superstep-split front in per-level refinement the pure V-cycle
+matches or beats flat on every benched instance (split widens the basin
+the projection lands in; the psdd circuits that used to need the hedge no
+longer do), pinned by ``tests/test_schedule_multilevel.py`` and measured
+by ``benchmarks/scheduling.py::split_scale``.  Setting ``flat_guard_n``
+back to a positive n restores the old cost-not-worse-than-flat hedge at
+the old price of one full flat run.
+
+Scale: coarsening's same-level scoring pass shards over node ranges
+through PR 7's ``ParallelContext`` (``workers=`` on
+``multilevel_schedule``); per-shard pair blocks concatenate to the serial
+arrays byte-for-byte, so the matching -- and the whole V-cycle -- is
+bit-identical for every worker count.  With the vectorized
+``Schedule.from_projection`` rebuilds this takes the cycle to n = 10^6
+DAGs end to end (``benchmarks/scheduling.py::split_scale``).
 """
 from __future__ import annotations
 
@@ -80,29 +89,84 @@ class MultilevelScheduleOptions:
     hc_rounds: int = 3         # rebalance+retime+node-move rounds per stop
     level_rounds: int = 1      # advanced-heuristic rounds per mid level
     final_rounds: int = 4      # advanced-heuristic rounds at the finest
-    flat_guard_n: int = 8192   # up to here ALSO run the flat path, keep the
-    #                            cheaper schedule (cost-not-worse by
-    #                            construction wherever both paths are
-    #                            tractable; 0 disables the hedge)
+    flat_guard_n: int = 0      # up to here ALSO run the flat path, keep the
+    #                            cheaper schedule.  0 (default since the
+    #                            split front landed, PR 9) disables the
+    #                            hedge -- the pure V-cycle stands on its own
+    superstep_splits: bool = True  # superstep-split front in per-level
+    #                            refinement (the move that retired the guard)
 
 
 # --------------------------------------------------------------- coarsening
 
+def _pair_parts(xch: np.ndarray, ch_arr: np.ndarray, xpar: np.ndarray,
+                par_arr: np.ndarray, mu: np.ndarray, level: np.ndarray,
+                max_fanout: int, lo: int, hi: int) -> tuple:
+    """Pair-candidate blocks for group-owner nodes in ``[lo, hi)``.
+
+    One vectorized pass over the flat CSR group arrays: all ordered pairs
+    within each owner's child group (weighted by the owner's ``mu``) and
+    within each owner's parent group (weighted by the pair's mean ``mu``),
+    kept only when distinct and on the same level.  Returns the six
+    arrays ``(cv, cu, cw, pv, pu, pw)`` -- child-group then parent-group
+    ``(v, u, weight)`` blocks.
+
+    Bit-identity contract (what lets ``parallel_pair_parts`` shard this):
+    restricting ``[lo, hi)`` restricts *owners* only, and owners are
+    visited in ascending id order, so concatenating shard blocks in shard
+    order -- all child blocks first, then all parent blocks, exactly the
+    serial append order -- reproduces the full ``(0, n)`` arrays
+    byte-for-byte.  Takes raw arrays (not a ``Dag``) so pool workers can
+    call it on shared-memory attaches.
+    """
+    out = []
+    for xg, arr, per_group_mu in ((xch, ch_arr, True),
+                                  (xpar, par_arr, False)):
+        lens = np.diff(xg)
+        sel = np.flatnonzero((lens >= 2) & (lens <= max_fanout))
+        sel = sel[(sel >= lo) & (sel < hi)]
+        if not len(sel):
+            z = np.zeros(0, dtype=np.int64)
+            out += [z, z, np.zeros(0)]
+            continue
+        L = lens[sel]
+        L2 = L * L
+        rep = np.repeat(sel, L2)
+        offs = np.arange(int(L2.sum()), dtype=np.int64)
+        offs -= np.repeat(np.cumsum(L2) - L2, L2)
+        Lr = np.repeat(L, L2)
+        base = xg[rep]
+        a = arr[base + offs // Lr]
+        b = arr[base + offs % Lr]
+        w = (np.repeat(mu[sel], L2) if per_group_mu
+             else 0.5 * (mu[a] + mu[b]))
+        keep = (a != b) & (level[a] == level[b])
+        out += [a[keep], b[keep], w[keep]]
+    return tuple(out)
+
+
 def same_level_matching(dag: Dag, level: np.ndarray, max_weight: float,
-                        rng: np.random.Generator,
-                        max_fanout: int = 16) -> tuple[np.ndarray, int]:
+                        rng: np.random.Generator, max_fanout: int = 16,
+                        ctx=None) -> tuple[np.ndarray, int]:
     """Cluster map from heavy-edge matching of same-topological-level nodes.
 
     Pair candidates are generated in one vectorized pass over the edge
-    arrays: all ordered pairs within each node's child group (scored by the
-    shared parent's ``mu`` -- a merged pair needs the parent's value
-    delivered once, not twice) and within each node's parent group (scored
-    by the mean of the pair's own ``mu`` -- a merged pair keeps the shared
-    consumer local to both), restricted to pairs on the *same* level.
-    Groups larger than ``max_fanout`` are skipped (hub nodes would expand
-    quadratically and their pairs are weak signals anyway).  Every node's
-    best partner (max score, ties to the smallest id) feeds a greedy sweep
-    in random order pairing mutually free nodes under ``max_weight``.
+    arrays (``_pair_parts``): all ordered pairs within each node's child
+    group (scored by the shared parent's ``mu`` -- a merged pair needs the
+    parent's value delivered once, not twice) and within each node's
+    parent group (scored by the mean of the pair's own ``mu`` -- a merged
+    pair keeps the shared consumer local to both), restricted to pairs on
+    the *same* level.  Groups larger than ``max_fanout`` are skipped (hub
+    nodes would expand quadratically and their pairs are weak signals
+    anyway).  Every node's best partner (max score, ties to the smallest
+    id) feeds a greedy sweep in random order pairing mutually free nodes
+    under ``max_weight``.
+
+    ``ctx`` (a ``partition.parallel.ParallelContext``) shards the pair
+    generation over node ranges; the per-shard blocks concatenate to the
+    serial arrays byte-for-byte (see ``_pair_parts``), so the returned
+    ``cmap`` is bit-identical for every worker count.  The greedy sweep
+    itself stays serial (it is a sequential dependence chain).
 
     Acyclicity: any directed path strictly increases the topological
     level, so there is never a path between two same-level nodes, and a
@@ -114,47 +178,38 @@ def same_level_matching(dag: Dag, level: np.ndarray, max_weight: float,
     src, dst = dag.edge_src, dag.edge_dst
     xch = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(np.bincount(src, minlength=n), out=xch[1:])
-    parts_v, parts_u, parts_w = [], [], []
-    for xg, arr, per_group_mu in ((xch, dst, True),
-                                  (dag.xpar, dag.par_arr, False)):
-        lens = np.diff(xg)
-        sel = np.flatnonzero((lens >= 2) & (lens <= max_fanout))
-        if not len(sel):
-            continue
-        L = lens[sel]
-        L2 = L * L
-        rep = np.repeat(sel, L2)
-        offs = np.arange(int(L2.sum()), dtype=np.int64)
-        offs -= np.repeat(np.cumsum(L2) - L2, L2)
-        Lr = np.repeat(L, L2)
-        base = xg[rep]
-        a = arr[base + offs // Lr]
-        b = arr[base + offs % Lr]
-        w = (np.repeat(dag.mu[sel], L2) if per_group_mu
-             else 0.5 * (dag.mu[a] + dag.mu[b]))
-        keep = (a != b) & (level[a] == level[b])
-        parts_v.append(a[keep])
-        parts_u.append(b[keep])
-        parts_w.append(w[keep])
+    mu = np.asarray(dag.mu, dtype=np.float64)
+    blocks = None
+    if (ctx is not None and not ctx.failed and ctx.workers > 1
+            and n >= ctx.min_nodes):
+        from ..partition.parallel import parallel_pair_parts
+        try:
+            blocks = parallel_pair_parts(dag, xch, level, ctx, max_fanout)
+        except Exception:
+            ctx.failed = True
+            blocks = None
+    if blocks is None:
+        blocks = [_pair_parts(xch, dst, dag.xpar, dag.par_arr, mu, level,
+                              max_fanout, 0, n)]
+    # serial append order: every child block, then every parent block
+    v = np.concatenate([b[0] for b in blocks] + [b[3] for b in blocks])
+    u = np.concatenate([b[1] for b in blocks] + [b[4] for b in blocks])
+    w = np.concatenate([b[2] for b in blocks] + [b[5] for b in blocks])
     pref = np.full(n, -1, dtype=np.int64)
-    if parts_v:
-        v = np.concatenate(parts_v)
-        u = np.concatenate(parts_u)
-        w = np.concatenate(parts_w)
-        if len(v):
-            key = v * n + u
-            order = np.argsort(key, kind="stable")
-            key, w = key[order], w[order]
-            first = np.ones(len(key), dtype=bool)
-            first[1:] = key[1:] != key[:-1]
-            starts = np.flatnonzero(first)
-            score = np.add.reduceat(w, starts)
-            vd, ud = key[starts] // n, key[starts] % n
-            order2 = np.lexsort((ud, -score, vd))
-            vd2 = vd[order2]
-            lead = np.ones(len(vd2), dtype=bool)
-            lead[1:] = vd2[1:] != vd2[:-1]
-            pref[vd2[lead]] = ud[order2][lead]
+    if len(v):
+        key = v * n + u
+        order = np.argsort(key, kind="stable")
+        key, w = key[order], w[order]
+        first = np.ones(len(key), dtype=bool)
+        first[1:] = key[1:] != key[:-1]
+        starts = np.flatnonzero(first)
+        score = np.add.reduceat(w, starts)
+        vd, ud = key[starts] // n, key[starts] % n
+        order2 = np.lexsort((ud, -score, vd))
+        vd2 = vd[order2]
+        lead = np.ones(len(vd2), dtype=bool)
+        lead[1:] = vd2[1:] != vd2[:-1]
+        pref[vd2[lead]] = ud[order2][lead]
     omega = dag.omega
     match = np.full(n, -1, dtype=np.int64)
     for v in rng.permutation(n):
@@ -207,14 +262,16 @@ def funnel_clustering(dag: Dag, max_weight: float) -> tuple[np.ndarray, int]:
 
 
 def build_levels(dag: Dag, P: int, opts: MultilevelScheduleOptions,
-                 rng: np.random.Generator) -> tuple[list[Dag],
-                                                    list[np.ndarray]]:
+                 rng: np.random.Generator,
+                 ctx=None) -> tuple[list[Dag], list[np.ndarray]]:
     """Coarsen until small/stagnant: ``(levels, cmaps)``.
 
     ``levels[0]`` is the input; ``cmaps[i]`` maps ``levels[i]`` onto
     ``levels[i + 1]``.  Rounds alternate funnel (depth) and same-level
     matching (width); when the preferred rule stagnates the other gets a
-    try before the stack is declared final.
+    try before the stack is declared final.  ``ctx`` shards the matching
+    rule's scoring pass over node ranges (bit-identical result for every
+    worker count; serial when ``None``).
     """
     levels, cmaps = [dag], []
     max_w = opts.cluster_cap_frac * float(dag.omega.sum()) / P
@@ -228,7 +285,8 @@ def build_levels(dag: Dag, P: int, opts: MultilevelScheduleOptions,
             else:
                 lvl = np.asarray(dag_levels(cur), dtype=np.int64)
                 cand, nck = same_level_matching(cur, lvl, max_w, rng,
-                                                max_fanout=opts.max_fanout)
+                                                max_fanout=opts.max_fanout,
+                                                ctx=ctx)
             if nck < opts.stagnation * cur.n:
                 cmap, nc, kind = cand, nck, k
                 break
@@ -288,9 +346,11 @@ def _refine_level(sched: Schedule, finest: bool,
     rounds = opts.final_rounds if finest else opts.level_rounds
     if rounds > 0:
         # caller's AdvancedOptions (pass selection, use_fronts) carry
-        # through to refinement; only the round budget is per-level
+        # through to refinement; the round budget and split toggle are
+        # per-level knobs of the V-cycle
         advanced_heuristic(sched, dataclasses.replace(
-            adv_opts or AdvancedOptions(), max_rounds=rounds))
+            adv_opts or AdvancedOptions(), max_rounds=rounds,
+            superstep_splitting=opts.superstep_splits))
     else:
         sched.prune_useless_comms()
         sched.compact()
@@ -301,7 +361,8 @@ def multilevel_schedule(inst: BspInstance,
                         opts: MultilevelScheduleOptions | None = None,
                         adv_opts: AdvancedOptions | None = None,
                         seed: int = 0, baseline: Schedule | None = None,
-                        stats: list | None = None) -> Schedule:
+                        stats: list | None = None,
+                        workers: int | None = None) -> Schedule:
     """Replication-aware multilevel scheduling V-cycle.
 
     Coarsens the DAG acyclically, solves the coarsest instance with the
@@ -312,11 +373,15 @@ def multilevel_schedule(inst: BspInstance,
 
     At or below ``coarsest_n`` (or on immediate coarsening stagnation)
     the driver *is* the flat path -- exact-equality fallthrough, pinned
-    by tests.  Up to ``flat_guard_n`` the flat path also runs as a hedge
-    and the cheaper schedule wins (see module docstring).  ``stats``
-    (optional list) receives one row per refinement stop with
-    projected/refined costs, which is how the refinement-never-increases
-    property is tested, plus a ``flat_guard`` row when the hedge ran.
+    by tests.  When ``flat_guard_n`` is set positive, up to that size the
+    flat path also runs as a hedge and the cheaper schedule wins (see
+    module docstring -- the hedge is off by default since PR 9).
+    ``workers > 1`` shards coarsening's matching-score pass over a
+    shared-memory process pool (bit-identical result; silently serial
+    where shm is unavailable).  ``stats`` (optional list) receives one
+    row per refinement stop with projected/refined costs, which is how
+    the refinement-never-increases property is tested, plus a
+    ``flat_guard`` row when the hedge ran.
     """
     opts = opts or MultilevelScheduleOptions()
     dag = inst.dag
@@ -324,7 +389,17 @@ def multilevel_schedule(inst: BspInstance,
         return best_replicated_schedule(inst, baseline=baseline,
                                         opts=adv_opts, seed=seed)
     rng = np.random.default_rng(seed)
-    levels, cmaps = build_levels(dag, inst.P, opts, rng)
+    ctx = None
+    if workers is not None and workers > 1:
+        from ..partition.parallel import (PARALLEL_MIN_NODES,
+                                          ParallelContext, shm_available)
+        if dag.n >= PARALLEL_MIN_NODES and shm_available():
+            ctx = ParallelContext(workers)
+    try:
+        levels, cmaps = build_levels(dag, inst.P, opts, rng, ctx=ctx)
+    finally:
+        if ctx is not None:
+            ctx.close()
     if not cmaps:  # immediate stagnation: no coarse level exists
         return best_replicated_schedule(inst, baseline=baseline,
                                         opts=adv_opts, seed=seed)

@@ -40,7 +40,9 @@ from .bsp import EPS, INF, BspInstance  # noqa: F401  (re-exported)
 # undo-log bookkeeping.  The SR sequence itself is cross-checked the
 # other way, against the frontier's *pure* cell simulation, by
 # tests/test_frontier.py's pricing-vs-replay property test.
-from ..frontier.schedule_front import apply_sm_mutations, apply_sr_mutations
+from ..frontier.schedule_front import (apply_sm_mutations,
+                                       apply_sr_mutations, split_front)
+from .engine import apply_split_mutations
 
 
 class Schedule:
@@ -400,6 +402,49 @@ def superstep_merge_pass(sched: Schedule) -> tuple[Schedule, bool]:
     return sched, improved
 
 
+def try_split(sched: Schedule, s: int, late) -> float | None:
+    """Price a superstep split (``late`` pairs delay into a new superstep
+    s+1) on a copy.
+
+    Returns the pre-prune cost delta (the quantity both search paths rank
+    winners by; pruning after a commit only lowers it further), or None
+    when the candidate is infeasible.  The mutation sequence is the shared
+    ``engine.apply_split_mutations``; the engine path prices the same
+    sequence purely (``frontier.price_superstep_split``).
+    """
+    trial = sched.copy()
+    if not apply_split_mutations(trial, s, late):
+        return None
+    return trial.current_cost() - sched.current_cost()
+
+
+def superstep_split_pass(sched: Schedule) -> tuple[Schedule, bool]:
+    """Superstep-split sweep, winner rule: price every level-cut
+    bipartition of every superstep's compute phase and commit the best
+    improving candidate (ties to the smallest ``(s, cut)`` by ascending
+    enumeration with a strict comparison), repeating until dry -- the
+    oracle mirror of the engine path's frontier-based pass."""
+    level = dag_levels(sched.inst.dag)
+    improved = False
+    while True:
+        best = None
+        for s in range(sched.S):
+            for _cut, late in split_front(sched, s, level):
+                priced = try_split(sched, s, late)
+                if priced is not None and priced < -EPS:
+                    if best is None or priced < best[0]:
+                        best = (priced, s, late)
+        if best is None:
+            break
+        ok = apply_split_mutations(sched, best[1], best[2])
+        assert ok, "priced split became infeasible"
+        sched.prune_useless_comms()
+        sched.current_cost()
+        sched.compact()
+        improved = True
+    return sched, improved
+
+
 def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> float | None:
     """Price SR (replicate the useful part of V_{p1,s} onto p2) on a copy.
 
@@ -455,6 +500,8 @@ class AdvancedOptions:
     superstep_merging: bool = True
     superstep_replication: bool = True
     max_rounds: int = 8
+    # appended last to keep positional construction stable
+    superstep_splitting: bool = False
 
 
 def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> Schedule:
@@ -467,6 +514,10 @@ def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> 
         # cf. paper Table 14)
         if opts.superstep_merging:
             sched, imp = superstep_merge_pass(sched)
+            improved |= imp
+        # splits directly after merges (same alternation as the engine path)
+        if opts.superstep_splitting:
+            sched, imp = superstep_split_pass(sched)
             improved |= imp
         if opts.batch_replication:
             improved |= batch_replication_pass(sched)
@@ -532,26 +583,19 @@ def bspg_schedule(inst: BspInstance, seed: int = 0, slack: float = 0.15) -> Sche
 
 
 def derive_comms(sched: Schedule) -> None:
-    """(Re)build the canonical comm set for the current assignment."""
-    dag = sched.inst.dag
+    """(Re)build the canonical comm set for the current assignment.
+
+    Delegates to the shared (vectorized) ``engine.canonical_comm_plan``;
+    the plan's sorted-(value, dst) row order is exactly the
+    ``sorted(first_use.items())`` add order of the seed's scalar loop,
+    which survives as ``engine._canonical_comm_plan_scalar`` and pins the
+    vectorized output bit-for-bit.
+    """
+    from .engine import canonical_comm_plan
     for (v, dst) in list(sched.comms.keys()):
         sched.remove_comm(v, dst)
-    # first use of each (value, proc) pair by compute
-    first_use: dict[tuple[int, int], int] = {}
-    for c in range(dag.n):
-        for p, s in sched.assign[c].items():
-            for u in dag.parents[c]:
-                key = (u, p)
-                if key not in first_use or s < first_use[key]:
-                    first_use[key] = s
-    for (v, p), s_use in sorted(first_use.items()):
-        if sched.compute_sstep(v, p) <= s_use:
-            continue  # locally computed in time
-        # source: the replica computed earliest
-        src, s_src = min(((pp, ss) for pp, ss in sched.assign[v].items()),
-                         key=lambda x: (x[1], x[0]))
-        assert s_src < s_use, f"value {v} for proc {p} not producible in time"
-        sched.add_comm(v, src, p, s_use - 1)
+    for (v, src, p, t) in canonical_comm_plan(sched.inst.dag, sched.assign):
+        sched.add_comm(v, src, p, t)
 
 
 def _comm_window(sched: Schedule, v: int, dst: int) -> tuple[int, int]:

@@ -304,6 +304,47 @@ def superstep_merge_pass(sched: Schedule,
     return sched, improved
 
 
+# -------------------------------------------------------- superstep splitting
+
+def superstep_split_pass(sched: Schedule) -> tuple[Schedule, bool]:
+    """Superstep-split sweep (the inverse of SM): per superstep, enumerate
+    level-cut bipartitions of the compute phase (``frontier.split_front``),
+    price every candidate *purely* (``price_superstep_split`` -- losers
+    never touch the undo log) and commit **the winner** -- minimal
+    pre-prune delta, ties to the smallest ``(s, cut)`` by ascending
+    enumeration with a strict comparison -- through the transaction
+    machinery, repeating until no candidate improves.  The oracle
+    (``reference.superstep_split_pass``) applies the same winner rule, so
+    trajectories stay bit-identical on integer weights.
+
+    Escapes over-merged basins organically: where SM has collapsed an
+    h-relation into one overloaded comm phase, the split re-derives the
+    affected comms canonically across the two resulting phases, trading
+    ``L`` against ``g * h`` -- the priced fixed point of merge + split is
+    what retires the multilevel flat-path guard.
+    """
+    from ..frontier import (commit_superstep_split, price_superstep_split,
+                            split_front)
+    from .list_sched import dag_levels
+
+    level = dag_levels(sched.inst.dag)
+    improved = False
+    while True:
+        pre = sorted(sched.comms.items())
+        best = None
+        for s in range(sched.S):
+            for _cut, late in split_front(sched, s, level):
+                priced = price_superstep_split(sched, s, late, pre)
+                if priced is not None and priced < -EPS:
+                    if best is None or priced < best[0]:
+                        best = (priced, s, late)
+        if best is None:
+            break
+        commit_superstep_split(sched, best[1], best[2])
+        improved = True
+    return sched, improved
+
+
 # ------------------------------------------------------ superstep replication
 
 def try_superstep_replication(sched: Schedule, s: int, p1: int, p2: int) -> bool:
@@ -390,7 +431,8 @@ def superstep_replication_pass(sched: Schedule,
 def best_replicated_schedule(inst, baseline: Schedule | None = None,
                              opts: "AdvancedOptions | None" = None,
                              seed: int = 0, multilevel: bool = False,
-                             ml_opts=None, stats: list | None = None) -> Schedule:
+                             ml_opts=None, stats: list | None = None,
+                             workers: int | None = None) -> Schedule:
     """Run the advanced heuristic from the best non-replicating schedule AND
     from the parallel list schedule.  The latter matters when the
     non-replicating optimum degenerates to few processors (e.g. the paper's
@@ -401,7 +443,10 @@ def best_replicated_schedule(inst, baseline: Schedule | None = None,
     (``multilevel.multilevel_schedule``) instead, which takes the same
     search to 100k-node DAGs; at or below its coarsest size that driver
     falls through to this flat path exactly.  ``ml_opts`` forwards a
-    ``MultilevelScheduleOptions``; ``stats`` collects per-level cost rows.
+    ``MultilevelScheduleOptions``; ``stats`` collects per-level cost rows;
+    ``workers`` (> 1) shards the coarsening scoring passes over a
+    process-parallel context (bit-identical results; serial where shared
+    memory is unavailable).
     """
     from .list_sched import baseline_schedule, bspg_schedule, hill_climb
 
@@ -409,7 +454,8 @@ def best_replicated_schedule(inst, baseline: Schedule | None = None,
         from .multilevel import multilevel_schedule
 
         return multilevel_schedule(inst, opts=ml_opts, adv_opts=opts,
-                                   seed=seed, baseline=baseline, stats=stats)
+                                   seed=seed, baseline=baseline, stats=stats,
+                                   workers=workers)
     if baseline is None:
         baseline = baseline_schedule(inst, seed=seed)
     cands = [advanced_heuristic(baseline.copy(), opts)]
@@ -426,6 +472,10 @@ class AdvancedOptions:
     max_rounds: int = 8
     # False = pre-frontier first-improvement SR sweep (benchmark comparator)
     use_fronts: bool = True
+    # winner-commit superstep splits right after the SM block (multilevel
+    # refinement enables this so merge/split reach a priced fixed point);
+    # appended last to keep positional construction stable
+    superstep_splitting: bool = False
 
 
 def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> Schedule:
@@ -439,6 +489,11 @@ def advanced_heuristic(sched: Schedule, opts: AdvancedOptions | None = None) -> 
         if opts.superstep_merging:
             sched, imp = superstep_merge_pass(sched,
                                               use_fronts=opts.use_fronts)
+            improved |= imp
+        # splits directly after merges: the two alternate to a priced
+        # fixed point (every commit strictly improves, so this terminates)
+        if opts.superstep_splitting:
+            sched, imp = superstep_split_pass(sched)
             improved |= imp
         if opts.batch_replication:
             improved |= batch_replication_pass(sched)

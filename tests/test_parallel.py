@@ -341,3 +341,69 @@ def test_end_to_end_workers(monkeypatch):
     assert is_valid(hg, base.masks, 4, 0.1, max_replicas=1)
     assert is_valid(hg, rep.masks, 4, 0.1)
     assert rep.cost <= base.cost + 1e-9
+
+
+# ------------------------------------------- sharded scheduling coarsening
+
+def _sched_pair_fixture(n=6000, seed=3):
+    from repro.core.schedule.list_sched import dag_levels
+    from repro.datagen import large_sptrsv_dag
+    dag = large_sptrsv_dag(n, seed=seed)
+    level = np.asarray(dag_levels(dag), dtype=np.int64)
+    xch = np.zeros(dag.n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(dag.edge_src, minlength=dag.n), out=xch[1:])
+    return dag, xch, level
+
+
+def test_sched_pair_parts_shards_bit_identical():
+    """The scheduling V-cycle's pair generator, without any pool: shard
+    blocks (child blocks then parent blocks, shard order) concatenate into
+    exactly the serial arrays."""
+    from repro.core.schedule.multilevel import _pair_parts
+    dag, xch, level = _sched_pair_fixture()
+    mu = np.asarray(dag.mu, dtype=np.float64)
+    serial = _pair_parts(xch, dag.edge_dst, dag.xpar, dag.par_arr, mu,
+                         level, 16, 0, dag.n)
+    for W in (2, 3, 5):
+        bounds = np.linspace(0, dag.n, W + 1).astype(np.int64)
+        blocks = [_pair_parts(xch, dag.edge_dst, dag.xpar, dag.par_arr, mu,
+                              level, 16, int(bounds[i]), int(bounds[i + 1]))
+                  for i in range(W)]
+        for k in range(6):
+            got = np.concatenate([b[k] for b in blocks])
+            assert np.array_equal(got, serial[k]), (W, k)
+
+
+@needs_shm
+@pytest.mark.parametrize("W", [2, 4])
+def test_pooled_same_level_matching_bit_identical(W):
+    """Pool-backed scoring must yield the identical cmap for every worker
+    count (the V-cycle bit-identity contract)."""
+    from repro.core.schedule.multilevel import same_level_matching
+    dag, xch, level = _sched_pair_fixture()
+    cap = float(dag.omega.sum())
+    cm_s, nc_s = same_level_matching(dag, level, cap,
+                                     np.random.default_rng(5))
+    with ParallelContext(W, min_nodes=64) as ctx:
+        cm_p, nc_p = same_level_matching(dag, level, cap,
+                                         np.random.default_rng(5), ctx=ctx)
+        assert not ctx.failed
+    assert nc_p == nc_s
+    assert np.array_equal(cm_p, cm_s)
+
+
+@needs_shm
+def test_multilevel_schedule_workers_bit_identical():
+    """End to end: ``multilevel_schedule(workers=2)`` equals the serial
+    V-cycle exactly (sharded scoring changes wall-clock, not results)."""
+    from repro.core.schedule import (BspInstance, MultilevelScheduleOptions,
+                                     multilevel_schedule)
+    from repro.datagen import large_sptrsv_dag
+    dag = large_sptrsv_dag(5000, seed=1)
+    inst = BspInstance(dag, 4, 2.0, 10.0)
+    opts = MultilevelScheduleOptions(coarsest_n=512)
+    s1 = multilevel_schedule(inst, opts=opts, seed=0)
+    s2 = multilevel_schedule(inst, opts=opts, seed=0, workers=2)
+    assert s1.current_cost() == s2.current_cost()
+    assert s1.assign == s2.assign
+    assert s1.comms == s2.comms

@@ -287,19 +287,36 @@ def test_multilevel_not_worse_than_flat(n, band):
 
 
 def test_flat_guard_enforces_not_worse():
-    """With the guard on (default), the driver returns the cheaper of the
-    V-cycle and the flat path -- never worse than flat by construction,
-    even on basin-unfriendly instances."""
+    """With the guard opted back in (``flat_guard_n`` positive -- it is
+    retired by default since the split front landed), the driver returns
+    the cheaper of the V-cycle and the flat path -- never worse than flat
+    by construction, even on basin-unfriendly instances."""
+    dag = psdd_dag(n_leaves=500, depth=12, seed=1)
+    inst = BspInstance(dag, P=8, g=4.0, L=20.0)
+    flat = best_replicated_schedule(inst, seed=0)
+    stats = []
+    mlv = best_replicated_schedule(
+        inst, seed=0, multilevel=True, stats=stats,
+        ml_opts=MultilevelScheduleOptions(flat_guard_n=8192))
+    assert mlv.current_cost() <= flat.current_cost() + 1e-9
+    guard_rows = [r for r in stats if r.get("flat_guard")]
+    assert len(guard_rows) == 1
+    assert guard_rows[0]["flat_cost"] == flat.current_cost()
+
+
+def test_guard_off_not_worse_on_psdd():
+    """PR 9 acceptance: the pure V-cycle (guard retired, splits on) is not
+    worse than flat on the psdd family that used to need the hedge."""
     dag = psdd_dag(n_leaves=500, depth=12, seed=1)
     inst = BspInstance(dag, P=8, g=4.0, L=20.0)
     flat = best_replicated_schedule(inst, seed=0)
     stats = []
     mlv = best_replicated_schedule(inst, seed=0, multilevel=True,
                                    stats=stats)
+    assert not any(r.get("flat_guard") for r in stats), \
+        "guard must be off by default"
+    assert mlv.validate() == []
     assert mlv.current_cost() <= flat.current_cost() + 1e-9
-    guard_rows = [r for r in stats if r.get("flat_guard")]
-    assert len(guard_rows) == 1
-    assert guard_rows[0]["flat_cost"] == flat.current_cost()
 
 
 def test_multilevel_fallthrough_exact_equality():

@@ -1,0 +1,223 @@
+"""Superstep-split front invariants (PR 9 tentpole).
+
+The split move bipartitions one superstep's compute phase at a level cut
+(late nodes delay one step, tail supersteps renumber, comms re-derive
+canonically for every touched value).  Its contract mirrors the SM/SR
+machinery: pure pre-commit pricing through ``_SplitSim`` cells must be
+bit-equal to a transactional replay of the same mutation, the engine-side
+winner-commit pass must stay in lockstep with the ``reference.py`` oracle
+on integer weights, split followed by the merge pass must never increase
+cost, and every committed round compacts (no empty supersteps survive,
+enforced by ``check(require_compact=True)``).  The canonical comm-plan
+vectorization and the sharded coarsening scoring pass are pinned
+bit-identical to their scalar/serial seeds here too.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.frontier import (commit_superstep_split,
+                                 price_superstep_split, split_front)
+from repro.core.hypergraph import Dag
+from repro.core.schedule import (BspInstance, Schedule, ScheduleState,
+                                 advanced_heuristic, bspg_schedule,
+                                 hill_climb, superstep_split_pass)
+from repro.core.schedule import reference as ref
+from repro.core.schedule.engine import (_canonical_comm_plan_scalar,
+                                        apply_split_mutations,
+                                        canonical_comm_plan)
+from repro.core.schedule.list_sched import dag_levels
+from repro.core.schedule.replication import (AdvancedOptions,
+                                             superstep_merge_pass)
+from repro.datagen import psdd_dag, sptrsv_dag
+
+
+def random_dag(n, seed, fanin=3, p_edge=0.5, n_src=8):
+    rng = np.random.default_rng(seed)
+    edges = []
+    for v in range(n_src, n):
+        for u in rng.choice(v, size=min(fanin, v), replace=False):
+            if rng.random() < p_edge:
+                edges.append((int(u), v))
+    return Dag(n=n, edge_list=edges)
+
+
+def merged_state(dag, P=4, g=4.0, L=20.0, seed=0):
+    """An advanced-heuristic schedule (merges ran, so supersteps hold more
+    than one topological level and split candidates exist).  ``Schedule``
+    *is* a ``ScheduleState`` -- the engine transaction API is live on it."""
+    inst = BspInstance(dag, P=P, g=g, L=L)
+    return advanced_heuristic(
+        hill_climb(bspg_schedule(inst, seed=seed), seed=seed))
+
+
+def all_candidates(sched):
+    level = np.asarray(dag_levels(sched.inst.dag), dtype=np.int64)
+    out = []
+    for s in range(sched.S):
+        for cut, late in split_front(sched, s, level):
+            out.append((s, cut, late))
+    return out
+
+
+# ------------------------------------------------------- pricing bit-equality
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_property_split_pricing_equals_replay(seed):
+    """Pure ``_SplitSim`` pricing must equal the engine delta of a
+    transactional replay of the same split, bit-for-bit, and rollback must
+    restore the pre-split cost exactly."""
+    sched = merged_state(random_dag(60, seed))
+    base_cost = sched.current_cost()
+    pre = sorted(sched.comms.items())
+    for s, _cut, late in all_candidates(sched):
+        priced = price_superstep_split(sched, s, late, pre=pre)
+        if priced is None:
+            continue
+        sched.begin()
+        ok = apply_split_mutations(sched, s, late, pre=pre)
+        assert ok, "feasible candidate refused in replay"
+        replayed = sched.current_cost() - base_cost
+        assert priced == replayed, (s, late, priced, replayed)
+        sched.rollback()
+        assert sched.current_cost() == base_cost
+    sched.check()
+
+
+def test_split_candidates_exist_after_merging():
+    """Merging packs multiple topological levels into a superstep, so the
+    front must enumerate candidates there (the flat baseline has one level
+    per superstep and none -- both by construction)."""
+    sched = merged_state(sptrsv_dag(n=300, band=12, seed=0))
+    cands = all_candidates(sched)
+    assert cands, "no split candidates on a merged sptrsv schedule"
+    # every candidate is feasible on a copy (level cuts cannot starve a
+    # child of a parent delayed past it)
+    for s, _cut, late in cands:
+        trial = sched.copy()
+        assert apply_split_mutations(trial, s, late)
+        trial.check()
+
+
+def test_commit_applies_winner_and_compacts():
+    """``commit_superstep_split`` lands exactly the priced delta and leaves
+    a compact, consistent engine state."""
+    sched = merged_state(psdd_dag(n_leaves=120, depth=8, seed=2))
+    base = sched.current_cost()
+    pre = sorted(sched.comms.items())
+    best = None
+    for s, _cut, late in all_candidates(sched):
+        priced = price_superstep_split(sched, s, late, pre=pre)
+        if priced is not None and (best is None or priced < best[0]):
+            best = (priced, s, late)
+    if best is None:
+        pytest.skip("instance yielded no feasible split candidate")
+    priced, s, late = best
+    commit_superstep_split(sched, s, late)
+    assert sched.current_cost() == base + priced
+    sched.check(require_compact=True)
+
+
+# --------------------------------------------------------- engine vs oracle
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 5])
+def test_lockstep_random_dags(seed):
+    """Engine and oracle advanced heuristics with splits enabled must land
+    on identical schedules (costs, assigns, comms) on integer weights."""
+    dag = random_dag(70, seed)
+    inst = BspInstance(dag, P=4, g=4.0, L=20.0)
+    eng = advanced_heuristic(hill_climb(bspg_schedule(inst, seed=0), seed=0),
+                             AdvancedOptions(superstep_splitting=True))
+    orc = ref.advanced_heuristic(
+        ref.hill_climb(ref.bspg_schedule(inst, seed=0), seed=0),
+        ref.AdvancedOptions(True, True, True, 8, True))
+    assert eng.current_cost() == orc.current_cost()
+    assert eng.S == orc.S
+    assert eng.assign == orc.assign
+    assert eng.comms == orc.comms
+    eng.check(require_compact=True)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sptrsv_dag(n=260, band=10, seed=1),
+    lambda: psdd_dag(n_leaves=100, depth=8, seed=3),
+])
+def test_lockstep_shipped_instances(make):
+    """Same lockstep pin on the paper's instance families."""
+    inst = BspInstance(make(), P=4, g=4.0, L=20.0)
+    eng = advanced_heuristic(hill_climb(bspg_schedule(inst, seed=0), seed=0),
+                             AdvancedOptions(superstep_splitting=True))
+    orc = ref.advanced_heuristic(
+        ref.hill_climb(ref.bspg_schedule(inst, seed=0), seed=0),
+        ref.AdvancedOptions(True, True, True, 8, True))
+    assert eng.current_cost() == orc.current_cost()
+    assert eng.assign == orc.assign
+    assert eng.comms == orc.comms
+
+
+def test_split_pass_lockstep_and_compact():
+    """The standalone winner-commit split passes (engine and oracle) agree
+    and leave no empty supersteps behind."""
+    dag = sptrsv_dag(n=220, band=10, seed=4)
+    inst = BspInstance(dag, P=4, g=4.0, L=20.0)
+    merged = advanced_heuristic(
+        hill_climb(bspg_schedule(inst, seed=0), seed=0))
+    ref_merged = ref.advanced_heuristic(
+        ref.hill_climb(ref.bspg_schedule(inst, seed=0), seed=0))
+    assert merged.assign == ref_merged.assign  # identical starting points
+    eng, ech = superstep_split_pass(merged)
+    orc, och = ref.superstep_split_pass(ref_merged)
+    assert ech == och
+    assert eng.current_cost() == orc.current_cost()
+    assert eng.assign == orc.assign
+    assert eng.comms == orc.comms
+    eng.check(require_compact=True)
+
+
+# -------------------------------------------------------------- cost safety
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_property_split_then_merge_never_worse(seed):
+    """Split followed by the merge pass is cost-safe: both passes commit
+    only strictly improving winners, so the round trip never regresses."""
+    sched = merged_state(random_dag(55, seed))
+    before = sched.current_cost()
+    sched, _ = superstep_split_pass(sched)
+    mid = sched.current_cost()
+    assert mid <= before
+    sched, _ = superstep_merge_pass(sched)
+    assert sched.current_cost() <= mid
+    sched.check(require_compact=True)
+    assert sched.validate() == []
+
+
+def test_require_compact_catches_empty_superstep():
+    """The new ``check(require_compact=True)`` invariant actually bites:
+    a hand-built schedule with a hollow middle superstep must fail it and
+    pass after ``compact()``."""
+    dag = Dag(n=2, edge_list=[(0, 1)])
+    inst = BspInstance(dag, P=2, g=1.0, L=1.0)
+    sched = ScheduleState(inst, 3)
+    sched.add_comp(0, 0, 0)
+    sched.add_comp(1, 0, 2)
+    sched.check()  # base invariants hold
+    with pytest.raises(AssertionError):
+        sched.check(require_compact=True)
+    sched.compact()
+    sched.check(require_compact=True)
+
+
+# -------------------------------------------------- canonical-plan pinning
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_property_comm_plan_vectorized_matches_scalar(seed):
+    """The bincount/lexsort ``canonical_comm_plan`` must reproduce the
+    scalar seed implementation entry-for-entry."""
+    sched = merged_state(random_dag(50, seed))
+    dag, assign = sched.inst.dag, sched.assign
+    fast = canonical_comm_plan(dag, assign)
+    slow = _canonical_comm_plan_scalar(dag, assign)
+    assert fast == slow
